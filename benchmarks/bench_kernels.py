@@ -1,0 +1,78 @@
+"""Kernel micro-bench: wall time of the pure-jnp oracle paths on CPU.
+
+On this container the Pallas kernels run in interpret mode (Python-speed, not
+meaningful to time); the oracle timings give the jnp baseline that a real-TPU
+Mosaic build would be compared against, and regression-guard the reference
+implementations.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from .common import emit, write_csv
+
+
+def _time(fn, *args, reps=5) -> float:
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run() -> List[Dict]:
+    key = jax.random.key(0)
+    rows = []
+
+    B, S, H, K, hd = 2, 1024, 8, 2, 64
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    fa = jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True))
+    t = _time(fa, q, k, v, pos, pos)
+    flops = 4 * B * H * S * S * hd
+    rows.append({"kernel": "attention_ref", "shape": f"B{B} S{S} H{H} hd{hd}",
+                 "us_per_call": round(t * 1e6, 1),
+                 "gflops_s": round(flops / t / 1e9, 1)})
+    emit("kernels/attention_ref", t * 1e6, f"{flops/t/1e9:.0f} GFLOP/s cpu")
+
+    B, S, H, N = 2, 512, 4, 64
+    r = jax.random.normal(jax.random.fold_in(key, 4), (B, S, H, N)) * 0.5
+    kk = jax.random.normal(jax.random.fold_in(key, 5), (B, S, H, N)) * 0.5
+    vv = jax.random.normal(jax.random.fold_in(key, 6), (B, S, H, N)) * 0.5
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 7), (B, S, H, N)) - 2)
+    u = jax.random.normal(jax.random.fold_in(key, 8), (H, N)) * 0.3
+    s0 = jnp.zeros((B, H, N, N))
+    rw = jax.jit(ref.rwkv6_scan_ref)
+    t = _time(rw, r, kk, vv, logw, u, s0)
+    rows.append({"kernel": "rwkv6_ref", "shape": f"B{B} S{S} H{H} N{N}",
+                 "us_per_call": round(t * 1e6, 1), "gflops_s": ""})
+    emit("kernels/rwkv6_ref", t * 1e6, f"S={S} sequential scan")
+
+    B, S, R = 4, 2048, 512
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 9), (B, S, R)))
+    b = jax.random.normal(jax.random.fold_in(key, 10), (B, S, R)) * 0.3
+    rg = jax.jit(ref.rglru_scan_ref)
+    t = _time(rg, a, b, None)
+    rows.append({"kernel": "rglru_ref", "shape": f"B{B} S{S} R{R}",
+                 "us_per_call": round(t * 1e6, 1), "gflops_s": ""})
+    emit("kernels/rglru_ref", t * 1e6, f"{B*S*R*3/t/1e9:.1f} Gelem-op/s")
+
+    T, E, topk = 8192, 64, 6
+    logits = jax.random.normal(jax.random.fold_in(key, 11), (T, E)) * 2
+    ro = jax.jit(lambda l: ref.moe_router_ref(l, topk))
+    t = _time(ro, logits)
+    rows.append({"kernel": "router_ref", "shape": f"T{T} E{E} k{topk}",
+                 "us_per_call": round(t * 1e6, 1), "gflops_s": ""})
+    emit("kernels/router_ref", t * 1e6, f"{T/t/1e6:.1f} Mtok/s")
+    write_csv("kernels", rows)
+    return rows

@@ -1,0 +1,70 @@
+"""Table 1 analogue: lines of code per model-selection algorithm.
+
+The paper's central quantitative evidence for interface generality is that
+each algorithm is small when written against the narrow waist (10-215 LoC).
+We count non-blank, non-comment, non-docstring lines of each scheduler module
+and report them next to the paper's numbers.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import time
+from typing import Dict, List
+
+from .common import emit, write_csv
+
+PAPER_LOC = {
+    "FIFO": 10,
+    "AsyncHyperBand": 78,
+    "HyperBand": 215,
+    "MedianStoppingRule": 68,
+    "HyperOpt(TPE)": 137,
+    "PBT": 169,
+}
+
+MODULES = {
+    "FIFO": "src/repro/core/schedulers/fifo.py",
+    "AsyncHyperBand": "src/repro/core/schedulers/asha.py",
+    "HyperBand": "src/repro/core/schedulers/hyperband.py",
+    "MedianStoppingRule": "src/repro/core/schedulers/median_stopping.py",
+    "HyperOpt(TPE)": "src/repro/core/search/tpe.py",
+    "PBT": "src/repro/core/schedulers/pbt.py",
+}
+
+
+def count_loc(path: str) -> int:
+    """Non-blank, non-comment, non-docstring logical source lines."""
+    with open(path) as f:
+        src = f.read()
+    tree = ast.parse(src)
+    doc_lines = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            if (node.body and isinstance(node.body[0], ast.Expr)
+                    and isinstance(node.body[0].value, ast.Constant)
+                    and isinstance(node.body[0].value.value, str)):
+                d = node.body[0]
+                doc_lines.update(range(d.lineno, d.end_lineno + 1))
+    n = 0
+    for i, line in enumerate(src.splitlines(), start=1):
+        s = line.strip()
+        if not s or s.startswith("#") or i in doc_lines:
+            continue
+        n += 1
+    return n
+
+
+def run(repo_root: str = ".") -> List[Dict]:
+    rows = []
+    t0 = time.time()
+    for name, rel in MODULES.items():
+        path = os.path.join(repo_root, rel)
+        loc = count_loc(path)
+        rows.append({"algorithm": name, "loc_ours": loc,
+                     "loc_paper": PAPER_LOC[name], "module": rel})
+        emit(f"loc/{name}", (time.time() - t0) * 1e6,
+             f"ours={loc} paper={PAPER_LOC[name]}")
+    write_csv("table1_loc", rows)
+    return rows

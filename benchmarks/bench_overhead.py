@@ -1,0 +1,78 @@
+"""Framework-overhead benchmark: event-loop throughput.
+
+The narrow waist is only viable if its bookkeeping is negligible next to a
+train step.  We drive the runner with a no-op trainable and measure results
+processed per second vs live-trial count, plus checkpoint save/restore costs
+on a realistically sized state pytree.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (CheckpointManager, FIFOScheduler, ObjectStore,
+                        SerialMeshExecutor, Trainable, Trial, TrialRunner)
+from repro.core.checkpoint import tree_from_bytes, tree_to_bytes
+
+from .common import emit, write_csv
+
+
+class NoopTrainable(Trainable):
+    def setup(self, config):
+        pass
+
+    def step(self):
+        return {"loss": 0.0}
+
+    def save(self):
+        return {"ok": 1}
+
+    def restore(self, s):
+        pass
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for n_trials in (8, 64, 256):
+        executor = SerialMeshExecutor(lambda n: NoopTrainable,
+                                      CheckpointManager(ObjectStore()),
+                                      total_devices=n_trials, checkpoint_freq=0)
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
+                             stopping_criteria={"training_iteration": 50})
+        for i in range(n_trials):
+            runner.add_trial(Trial({}, stopping_criteria={"training_iteration": 50}))
+        t0 = time.time()
+        runner.run()
+        wall = time.time() - t0
+        n_results = n_trials * 50
+        rows.append({"bench": "event_loop", "n_trials": n_trials,
+                     "results_per_s": round(n_results / wall, 1),
+                     "us_per_result": round(wall / n_results * 1e6, 2)})
+        emit(f"overhead/event_loop_n{n_trials}", wall / n_results * 1e6,
+             f"{n_results/wall:.0f} results/s")
+
+    # checkpoint codec on a ~10M-float pytree
+    tree = {"params": {f"layer{i}": np.random.default_rng(i).standard_normal(
+        (256, 512)).astype(np.float32) for i in range(20)}}
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        data = tree_to_bytes(tree)
+    enc = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        tree_from_bytes(data)
+    dec = (time.time() - t0) / reps
+    mb = len(data) / 2**20
+    rows.append({"bench": "ckpt_encode", "n_trials": 0,
+                 "results_per_s": round(mb / enc, 1),
+                 "us_per_result": round(enc * 1e6, 1)})
+    rows.append({"bench": "ckpt_decode", "n_trials": 0,
+                 "results_per_s": round(mb / dec, 1),
+                 "us_per_result": round(dec * 1e6, 1)})
+    emit("overhead/ckpt_encode", enc * 1e6, f"{mb/enc:.0f} MiB/s ({mb:.0f} MiB)")
+    emit("overhead/ckpt_decode", dec * 1e6, f"{mb/dec:.0f} MiB/s")
+    write_csv("overhead", rows)
+    return rows

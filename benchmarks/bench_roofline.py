@@ -1,0 +1,47 @@
+"""Roofline table emission: reads the dry-run JSON records and produces the
+per-(arch x shape x mesh) roofline CSV that EXPERIMENTS.md §Roofline cites.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import RESULTS_DIR, emit, write_csv
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for fname in ("dryrun_single.json", "dryrun_multi.json", "dryrun_both.json"):
+        path = os.path.join(RESULTS_DIR, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            records = json.load(f)
+        for r in records:
+            if r.get("status") != "compiled":
+                continue
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "chips": r["chips"],
+                "compute_ms": round(r["compute_s"] * 1e3, 2),
+                "memory_ms": round(r["memory_s"] * 1e3, 2),
+                "collective_ms": round(r["collective_s"] * 1e3, 2),
+                "dominant": r["dominant"],
+                "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+                "hbm_per_device_gib": round(r["hbm_per_device_gib"], 2),
+                "step_time_s": round(r["step_time_s"], 3),
+            })
+    # dedupe (arch, shape, mesh)
+    seen = {}
+    for row in rows:
+        seen[(row["arch"], row["shape"], row["mesh"])] = row
+    rows = sorted(seen.values(), key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             r["step_time_s"] * 1e6,
+             f"{r['dominant']}-bound useful={r['useful_flops_ratio']}")
+    write_csv("roofline", rows)
+    if not rows:
+        emit("roofline/none", 0.0, "run repro.launch.dryrun --out benchmarks/results first")
+    return rows

@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: surrogate objectives + result CSV emission."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_csv(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+class SurrogateTrainable:
+    """Deterministic surrogate of a training curve:
+
+        loss(t) = quality + amplitude * decay^t + noise
+
+    quality = (lr - lr*)^2 scaled — separates trials; decay speed varies per
+    trial so trial lengths/curves are irregular (paper §3 requirement).
+    """
+
+    def __init__(self, config: Dict[str, Any]):
+        from repro.core.api import Trainable  # noqa
+        self.lr = float(config["lr"])
+        self.seed = int(config.get("seed", 0))
+        rng = np.random.default_rng(self.seed)
+        self.quality = (np.log10(self.lr) + 2.0) ** 2 * 0.5  # optimum lr=1e-2
+        self.decay = rng.uniform(0.85, 0.95)
+        self.noise = float(config.get("noise", 0.005))
+        self.rng = rng
+        self.x = 1.0
+        self.iteration = 0
+        self.config = dict(config)
+
+    def train(self):
+        self.x *= self.decay
+        self.iteration += 1
+        return {"loss": self.quality + self.x + self.rng.normal(0, self.noise)}
+
+    # Trainable-compatible surface used by the executor
+    def step(self):
+        return self.train()
+
+    def save(self):
+        return {"x": self.x, "lr": self.lr, "q": self.quality}
+
+    def restore(self, s):
+        self.x = s["x"]
+        self.lr = s["lr"]
+        self.quality = s["q"]
+
+    def reset_config(self, cfg):
+        self.lr = float(cfg["lr"])
+        self.quality = (np.log10(self.lr) + 2.0) ** 2 * 0.5
+        self.config = dict(cfg)
+        return True
+
+    def cleanup(self):
+        pass

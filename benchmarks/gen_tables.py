@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md markdown tables from benchmark artifacts."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _md_table(rows, cols, headers=None):
+    headers = headers or cols
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = []
+    for fname in ("dryrun_single.json", "dryrun_multi.json"):
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for r in json.load(f):
+                if r.get("status") == "compiled" and r["mesh"] == mesh:
+                    rows.append({
+                        "arch": r["arch"], "shape": r["shape"],
+                        "compute_ms": round(r["compute_s"] * 1e3, 1),
+                        "memory_ms": round(r["memory_s"] * 1e3, 1),
+                        "collective_ms": round(r["collective_s"] * 1e3, 1),
+                        "dominant": r["dominant"],
+                        "useful": round(r["useful_flops_ratio"], 3),
+                        "hbm_GiB": round(r["hbm_per_device_gib"], 2),
+                    })
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"])] = r
+    rows = sorted(seen.values(), key=lambda r: (r["arch"], r["shape"]))
+    return _md_table(rows, ["arch", "shape", "compute_ms", "memory_ms",
+                            "collective_ms", "dominant", "useful", "hbm_GiB"])
+
+
+def skip_table() -> str:
+    rows = []
+    path = os.path.join(RESULTS, "dryrun_single.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            for r in json.load(f):
+                if r.get("status") == "skipped":
+                    rows.append({"arch": r["arch"], "shape": r["shape"],
+                                 "reason": r["reason"]})
+    return _md_table(rows, ["arch", "shape", "reason"])
+
+
+def csv_table(name: str) -> str:
+    path = os.path.join(RESULTS, f"{name}.csv")
+    if not os.path.exists(path):
+        return f"(missing {name}.csv)"
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        return "(empty)"
+    return _md_table(rows, list(rows[0].keys()))
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("roofline-single", "all"):
+        print("### single-pod (16x16 = 256 chips)\n")
+        print(roofline_table("pod16x16"))
+    if which in ("roofline-multi", "all"):
+        print("\n### multi-pod (2x16x16 = 512 chips)\n")
+        print(roofline_table("pods2x16x16"))
+    if which in ("skips", "all"):
+        print("\n### documented skips\n")
+        print(skip_table())
+    if which in ("loc", "all"):
+        print("\n### LoC (Table 1)\n")
+        print(csv_table("table1_loc"))
+    if which in ("convergence", "all"):
+        print("\n### convergence\n")
+        print(csv_table("convergence"))

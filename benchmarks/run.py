@@ -1,0 +1,57 @@
+"""Benchmark harness — one bench per paper table/claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines; full tables land in
+benchmarks/results/*.csv.
+
+  table1_loc   — paper Table 1: LoC per algorithm against the narrow waist
+  convergence  — scheduler quality vs budget (ASHA/HB/Median/PBT/TPE vs FIFO)
+  overhead     — event-loop + checkpoint-codec throughput
+  scaling      — slice-pool occupancy under irregular trials (paper §4.3.1)
+  vmap         — beyond-paper: stacked-vmap trial execution vs serial
+  kernels      — pure-jnp oracle timings (TPU kernel baselines)
+  roofline     — per-(arch x shape x mesh) table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="run a single bench (loc|convergence|overhead|"
+                         "scaling|vmap|kernels|roofline)")
+    args = ap.parse_args()
+
+    from . import (bench_convergence, bench_kernels, bench_loc, bench_overhead,
+                   bench_roofline, bench_scaling, bench_vmap)
+    benches = {
+        "loc": bench_loc.run,
+        "convergence": bench_convergence.run,
+        "overhead": bench_overhead.run,
+        "scaling": bench_scaling.run,
+        "vmap": bench_vmap.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    selected = {args.only: benches[args.only]} if args.only else benches
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in selected.items():
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all bench failures at the end
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

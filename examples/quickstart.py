@@ -1,0 +1,43 @@
+"""Quickstart — the paper's §4.3 minimal example, runnable as-is.
+
+A function-based trainable (cooperative API), a 3x2 grid search, and an
+asynchronous-HyperBand scheduler:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ASHAScheduler, grid_search, run_experiments
+
+
+def my_train_func(tune):
+    """An ordinary training loop + three cooperative calls (paper Fig. 2a)."""
+    lr = tune.params["lr"]
+    activation = tune.params["activation"]
+    # toy objective: quadratic in log-lr, 'relu' slightly better than 'tanh'
+    quality = (np.log10(lr) + 2.0) ** 2 + (0.0 if activation == "relu" else 0.05)
+    x = 1.0
+    for step in range(50):
+        x *= 0.9
+        if tune.should_checkpoint():
+            tune.record_checkpoint({"x": x, "step": step})
+        tune.report(loss=quality + x)
+
+
+if __name__ == "__main__":
+    analysis = run_experiments(
+        my_train_func,
+        {
+            "lr": grid_search([0.01, 0.001, 0.0001]),
+            "activation": grid_search(["relu", "tanh"]),
+        },
+        scheduler=ASHAScheduler(metric="loss", mode="min", max_t=50,
+                                grace_period=5, reduction_factor=2),
+        stop={"training_iteration": 50},
+        verbose=True,
+    )
+    print("\nbest config:", analysis.best_config())
+    print("best loss:  ", round(analysis.best_value(), 4))
+    for row in analysis.results_table():
+        print(f"  {row['trial_id']}: {row['status']:10s} "
+              f"iters={row['iterations']:2d} best={row['best']:.4f} {row['config']}")

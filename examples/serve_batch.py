@@ -1,0 +1,41 @@
+"""Batched serving with a KV cache: prefill a batch of prompts, then decode —
+runs gemma-2b (reduced) and rwkv6 (reduced, O(1)-state) side by side.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_step, init_params, param_count, prefill
+from repro.train.serve_step import sample_tokens
+
+
+def serve(arch: str, batch=2, prompt_len=32, new_tokens=12):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.key(0), cfg)
+    prompts = jax.random.randint(jax.random.key(1), (batch, prompt_len),
+                                 0, cfg.vocab_size)
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": prompts}, cfg,
+                             max_len=prompt_len + new_tokens)
+    decode = jax.jit(lambda c, t, p: decode_step(params, c, t, p, cfg))
+    tok = sample_tokens(logits, jax.random.key(2), temperature=0.8)
+    out = [tok]
+    for i in range(new_tokens - 1):
+        logits, caches = decode(caches, tok, jnp.asarray(prompt_len + i))
+        tok = sample_tokens(logits, jax.random.fold_in(jax.random.key(2), i), 0.8)
+        out.append(tok)
+    wall = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    state_desc = ("recurrent state (O(1) in context)" if cfg.family == "ssm"
+                  else f"KV cache (cap {prompt_len + new_tokens})")
+    print(f"{arch:24s} {param_count(params):>9,} params  {state_desc}")
+    print(f"  generated {gen.shape} in {wall:.1f}s; row0: {gen[0].tolist()}")
+
+
+if __name__ == "__main__":
+    serve("gemma-2b")
+    serve("rwkv6-1.6b")

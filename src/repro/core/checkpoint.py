@@ -1,0 +1,138 @@
+"""Checkpoint serialization: pytree <-> bytes (msgpack) and a manager.
+
+The paper relies on checkpoints for (a) fault tolerance, (b) PBT-style clone /
+hyperparameter mutation, (c) pause/resume under HyperBand.  In functional JAX
+the trial state *is* a pytree, so a checkpoint is an exact, race-free snapshot.
+
+We serialize with msgpack: tree structure as nested lists/dicts, leaves as
+(dtype, shape, raw bytes).  No pickle on the wire for arrays (portable), and a
+CRC over the payload catches truncation.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+from .object_store import ObjectStore
+from .trial import Checkpoint
+
+__all__ = ["tree_to_bytes", "tree_from_bytes", "CheckpointManager", "save_pytree", "load_pytree"]
+
+_ARR = "__arr__"
+_SCALAR = "__scalar__"
+
+
+def _encode_leaf(leaf: Any):
+    if isinstance(leaf, (jax.Array, np.ndarray)):
+        arr = np.asarray(leaf)
+        return {_ARR: [str(arr.dtype), list(arr.shape), arr.tobytes()]}
+    if isinstance(leaf, (int, float, bool, str)) or leaf is None:
+        return {_SCALAR: leaf}
+    if isinstance(leaf, (np.integer, np.floating)):
+        return {_SCALAR: leaf.item()}
+    raise TypeError(f"unsupported checkpoint leaf type: {type(leaf)}")
+
+
+def _decode_leaf(obj):
+    if isinstance(obj, dict) and _ARR in obj:
+        dtype, shape, raw = obj[_ARR]
+        return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape).copy()
+    if isinstance(obj, dict) and _SCALAR in obj:
+        return obj[_SCALAR]
+    raise TypeError(f"bad checkpoint leaf: {obj!r}")
+
+
+def _encode(node: Any):
+    if isinstance(node, dict) and _ARR not in node and _SCALAR not in node:
+        return {"__dict__": {k: _encode(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"__list__" if isinstance(node, list) else "__tuple__": [_encode(v) for v in node]}
+    return _encode_leaf(node)
+
+
+def _decode(obj: Any):
+    if isinstance(obj, dict):
+        if "__dict__" in obj:
+            return {k: _decode(v) for k, v in obj["__dict__"].items()}
+        if "__list__" in obj:
+            return [_decode(v) for v in obj["__list__"]]
+        if "__tuple__" in obj:
+            return tuple(_decode(v) for v in obj["__tuple__"])
+    return _decode_leaf(obj)
+
+
+def tree_to_bytes(tree: Any) -> bytes:
+    payload = msgpack.packb(_encode(tree), use_bin_type=True)
+    crc = zlib.crc32(payload)
+    return crc.to_bytes(4, "little") + payload
+
+
+def tree_from_bytes(data: bytes) -> Any:
+    crc, payload = int.from_bytes(data[:4], "little"), data[4:]
+    if zlib.crc32(payload) != crc:
+        raise IOError("checkpoint CRC mismatch (truncated or corrupt)")
+    return _decode(msgpack.unpackb(payload, raw=False, strict_map_key=False))
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(tree_to_bytes(tree))
+    os.replace(tmp, path)  # atomic
+
+
+def load_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        return tree_from_bytes(f.read())
+
+
+class CheckpointManager:
+    """Stores trial checkpoints in the object store, optionally mirrored to disk.
+
+    ``keep_last`` bounds per-trial retained checkpoints (older ones deleted);
+    a checkpoint pinned by the scheduler (e.g. PBT donor) survives via the
+    object store's own references.
+    """
+
+    def __init__(self, store: ObjectStore, dir: Optional[str] = None,
+                 keep_last: int = 2, durable: bool = False):
+        self.store = store
+        self.dir = dir
+        self.keep_last = keep_last
+        self.durable = durable  # mirror every checkpoint to disk (fault tolerance)
+        self._per_trial: Dict[str, list] = {}
+
+    def save(self, trial_id: str, iteration: int, state: Any, to_disk: bool = False) -> Checkpoint:
+        key = f"ckpt/{trial_id}/{iteration}"
+        self.store.put(state, key=key)
+        path = None
+        if (to_disk or self.durable) and self.dir:
+            safe_id = trial_id.replace("/", "_")
+            path = os.path.join(self.dir, safe_id, f"iter_{iteration}.ckpt")
+            save_pytree(state, path)
+        ckpt = Checkpoint(trial_id=trial_id, training_iteration=iteration,
+                          store_key=key, path=path)
+        hist = self._per_trial.setdefault(trial_id, [])
+        hist.append(ckpt)
+        while len(hist) > self.keep_last:
+            old = hist.pop(0)
+            if old.store_key:
+                self.store.delete(old.store_key)
+        return ckpt
+
+    def restore(self, ckpt: Checkpoint) -> Any:
+        if ckpt.store_key and self.store.contains(ckpt.store_key):
+            return self.store.get(ckpt.store_key)
+        if ckpt.path:
+            return load_pytree(ckpt.path)
+        raise KeyError(f"checkpoint {ckpt.location} unavailable")
+
+    def latest(self, trial_id: str) -> Optional[Checkpoint]:
+        hist = self._per_trial.get(trial_id)
+        return hist[-1] if hist else None

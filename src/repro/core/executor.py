@@ -1,0 +1,224 @@
+"""Trial executors — the Ray-actor analogue on a TPU mesh (DESIGN.md §2).
+
+``SerialMeshExecutor`` steps RUNNING trainables round-robin from the host loop:
+TPU slices are the scarce resource, so cooperative time-slicing on the host
+preserves the paper's event semantics (irregular trial lengths, intermediate
+results, pause/clone) while the accelerator work inside each ``step`` is the
+jitted, sharded computation.  The ``SlicePool`` (dist/submesh.py) hands each
+trial a sub-mesh sized to its resource request.
+
+``VmapExecutor`` lives in vmap_executor.py (beyond-paper optimization).
+"""
+from __future__ import annotations
+
+import traceback
+from collections import deque
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from .api import Trainable
+from .checkpoint import CheckpointManager
+from .resources import ResourceAccountant, Resources
+from .trial import Checkpoint, Result, Trial, TrialStatus
+
+__all__ = ["TrialExecutor", "SerialMeshExecutor"]
+
+
+class TrialExecutor:
+    """Interface the runner drives."""
+
+    def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
+        raise NotImplementedError
+
+    def pause_trial(self, trial: Trial) -> None:
+        raise NotImplementedError
+
+    def stop_trial(self, trial: Trial, error: Optional[str] = None) -> None:
+        raise NotImplementedError
+
+    def restart_trial_with_config(
+        self, trial: Trial, checkpoint: Checkpoint, new_config: Dict[str, Any]
+    ) -> None:
+        raise NotImplementedError
+
+    def get_next_result(self) -> Optional[Tuple[Trial, Any]]:
+        raise NotImplementedError
+
+    def has_resources(self, trial: Trial) -> bool:
+        raise NotImplementedError
+
+    def has_running(self) -> bool:
+        raise NotImplementedError
+
+    def save_checkpoint(self, trial: Trial) -> Checkpoint:
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        pass
+
+
+class SerialMeshExecutor(TrialExecutor):
+    def __init__(
+        self,
+        trainable_cls_resolver: Callable[[str], type],
+        checkpoint_manager: CheckpointManager,
+        total_cpu: float = 64.0,
+        total_devices: int = 256,
+        slice_pool: Optional[Any] = None,  # dist.submesh.SlicePool
+        checkpoint_freq: int = 0,
+    ):
+        self._resolve = trainable_cls_resolver
+        self.ckpt = checkpoint_manager
+        self.accountant = ResourceAccountant(total_cpu, total_devices)
+        self.slice_pool = slice_pool
+        self.checkpoint_freq = checkpoint_freq
+        self._running: Dict[str, Trainable] = {}
+        self._queue: deque = deque()  # round-robin order of trial_ids
+        self._trials: Dict[str, Trial] = {}
+        self._slices: Dict[str, Any] = {}
+
+    # -- capacity -----------------------------------------------------------------
+    def has_resources(self, trial: Trial) -> bool:
+        if self.slice_pool is not None and not self.slice_pool.can_fit(trial.resources.devices):
+            return False
+        return self.accountant.has_room(trial.resources)
+
+    def has_running(self) -> bool:
+        return bool(self._running)
+
+    # -- lifecycle ------------------------------------------------------------------
+    def _instantiate(self, trial: Trial) -> Trainable:
+        cls = self._resolve(trial.trainable_name)
+        config = dict(trial.config)
+        if self.slice_pool is not None:
+            config["_slice"] = self._slices[trial.trial_id]
+        return cls(config)
+
+    def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
+        if not self.has_resources(trial):
+            return False
+        self.accountant.acquire(trial.resources)
+        if self.slice_pool is not None:
+            self._slices[trial.trial_id] = self.slice_pool.acquire(trial.resources.devices)
+        try:
+            trainable = self._instantiate(trial)
+            if checkpoint is not None:
+                state = self.ckpt.restore(checkpoint)
+                trainable.restore(state)
+                trainable.iteration = checkpoint.training_iteration
+        except Exception:
+            self._release(trial)
+            trial.error = traceback.format_exc()
+            trial.set_status(TrialStatus.ERROR)
+            return False
+        self._running[trial.trial_id] = trainable
+        self._trials[trial.trial_id] = trial
+        self._queue.append(trial.trial_id)
+        trial.set_status(TrialStatus.RUNNING)
+        return True
+
+    def _release(self, trial: Trial) -> None:
+        self.accountant.release(trial.resources)
+        if self.slice_pool is not None and trial.trial_id in self._slices:
+            self.slice_pool.release(self._slices.pop(trial.trial_id))
+
+    def _teardown(self, trial: Trial) -> None:
+        trainable = self._running.pop(trial.trial_id, None)
+        if trainable is not None:
+            try:
+                trainable.cleanup()
+            except Exception:
+                pass
+            self._release(trial)
+        try:
+            self._queue.remove(trial.trial_id)
+        except ValueError:
+            pass
+
+    def save_checkpoint(self, trial: Trial) -> Checkpoint:
+        trainable = self._running[trial.trial_id]
+        state = trainable.save()
+        ckpt = self.ckpt.save(trial.trial_id, trainable.iteration, state)
+        trial.checkpoint = ckpt
+        return ckpt
+
+    def pause_trial(self, trial: Trial) -> None:
+        if trial.trial_id in self._running:
+            self.save_checkpoint(trial)
+            self._teardown(trial)
+        trial.set_status(TrialStatus.PAUSED)
+
+    def stop_trial(self, trial: Trial, error: Optional[str] = None) -> None:
+        self._teardown(trial)
+        if error:
+            trial.error = error
+            trial.set_status(TrialStatus.ERROR)
+        else:
+            trial.set_status(TrialStatus.TERMINATED)
+
+    def restart_trial_with_config(self, trial, checkpoint, new_config) -> None:
+        """PBT exploit: restore donor state under a mutated config.
+
+        Tries in-place ``reset_config`` first (cheap); falls back to full
+        teardown + rebuild, exactly like Ray Tune's reuse_actors path.
+        """
+        trial.config = dict(new_config)
+        trainable = self._running.get(trial.trial_id)
+        state = self.ckpt.restore(checkpoint)
+        if trainable is not None and trainable.reset_config(new_config):
+            trainable.restore(state)
+            trainable.iteration = checkpoint.training_iteration
+        else:
+            if trainable is not None:
+                self._teardown(trial)
+                trial.set_status(TrialStatus.PAUSED)
+            started = self.start_trial(trial, checkpoint=None)
+            if not started:
+                return
+            new_trainable = self._running[trial.trial_id]
+            new_trainable.restore(state)
+            new_trainable.iteration = checkpoint.training_iteration
+
+    # -- stepping -------------------------------------------------------------------
+    def get_next_result(self) -> Optional[Tuple[Trial, Any]]:
+        """Step the next running trainable one unit; return (trial, Result|Exception)."""
+        while self._queue:
+            trial_id = self._queue[0]
+            self._queue.rotate(-1)
+            trainable = self._running.get(trial_id)
+            if trainable is None:
+                try:
+                    self._queue.remove(trial_id)
+                except ValueError:
+                    pass
+                continue
+            trial = self._trials[trial_id]
+            try:
+                metrics = trainable.train()
+            except Exception as e:  # noqa: BLE001 — trial error, not framework error
+                return trial, e
+            done = bool(metrics.pop("done", False))
+            result = Result(
+                trial_id=trial_id,
+                training_iteration=trainable.iteration,
+                metrics=metrics,
+                done=done,
+            )
+            if (
+                self.checkpoint_freq
+                and trainable.iteration % self.checkpoint_freq == 0
+                and not done
+            ):
+                try:
+                    self.save_checkpoint(trial)
+                except NotImplementedError:
+                    pass
+            return trial, result
+        return None
+
+    def get_trainable(self, trial_id: str) -> Optional[Trainable]:
+        return self._running.get(trial_id)
+
+    def shutdown(self) -> None:
+        for trial_id in list(self._running):
+            trial = self._trials[trial_id]
+            self._teardown(trial)

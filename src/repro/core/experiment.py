@@ -1,0 +1,235 @@
+"""Experiment spec and ``run_experiments`` — the paper's §4.3 entry point.
+
+    def my_func(tune): ...
+    tune.run_experiments(my_func, {
+        "lr": tune.grid_search([0.01, 0.001, 0.0001]),
+        "activation": tune.grid_search(["relu", "tanh"]),
+    }, scheduler=HyperBandScheduler(...))
+
+Accepts a function-based trainable, a Trainable subclass, or a registered name.
+Grid axes become the initial trial set; ``num_samples`` repeats stochastic
+draws; a ``searcher`` (TPE/random) can generate trials on demand instead.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import tempfile
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from .api import Trainable, wrap_function
+from .checkpoint import CheckpointManager
+from .executor import SerialMeshExecutor, TrialExecutor
+from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Logger
+from .object_store import ObjectStore
+from .resources import Resources
+from .runner import TrialRunner
+from .schedulers.base import TrialScheduler
+from .schedulers.fifo import FIFOScheduler
+from .search.basic import Searcher
+from .search.variants import count_grid_variants, format_variant_tag, generate_variants
+from .trial import Trial, TrialStatus
+
+__all__ = ["run_experiments", "ExperimentAnalysis", "register_trainable"]
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_trainable(name: str, cls_or_fn: Union[type, Callable]) -> None:
+    _REGISTRY[name] = (
+        cls_or_fn if inspect.isclass(cls_or_fn) else wrap_function(cls_or_fn)
+    )
+
+
+class _StatePersister(Logger):
+    """Fault tolerance (paper §4.2): trial metadata lives in memory, durability
+    comes from checkpoints + this periodic metadata snapshot.  On restart,
+    ``run_experiments(..., resume=True)`` rebuilds the trial list: finished
+    trials keep their results, interrupted ones restart from their last disk
+    checkpoint (or from scratch if none was written)."""
+
+    def __init__(self, path: str, runner_ref):
+        self.path = path
+        self.runner_ref = runner_ref
+
+    def _dump(self) -> None:
+        import pickle
+        runner = self.runner_ref()
+        if runner is None:
+            return
+        tmp = self.path + ".tmp"
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(tmp, "wb") as f:
+            pickle.dump(runner.trials, f)
+        os.replace(tmp, self.path)
+
+    def on_trial_complete(self, trial) -> None:
+        self._dump()
+
+    def on_experiment_end(self, trials) -> None:
+        self._dump()
+
+
+def load_experiment_state(log_dir: str) -> List[Trial]:
+    """Trials from a previous (possibly interrupted) run in ``log_dir``."""
+    import pickle
+    path = os.path.join(log_dir, "experiment_state.pkl")
+    if not os.path.exists(path):
+        return []
+    with open(path, "rb") as f:
+        trials: List[Trial] = pickle.load(f)
+    for t in trials:
+        if not t.status.is_finished():
+            # interrupted mid-flight: resume from the last durable checkpoint
+            if t.checkpoint is not None and t.checkpoint.path \
+                    and os.path.exists(t.checkpoint.path):
+                t.status = TrialStatus.PAUSED
+            else:
+                t.status = TrialStatus.PENDING
+                t.results.clear()
+                t.checkpoint = None
+    return trials
+
+
+class ExperimentAnalysis:
+    """Post-hoc queries over a finished experiment (best trial, result table)."""
+
+    def __init__(self, trials: List[Trial], metric: str, mode: str):
+        self.trials = trials
+        self.metric = metric
+        self.mode = mode
+
+    def best_trial(self) -> Optional[Trial]:
+        best, best_v = None, None
+        for t in self.trials:
+            v = t.best_value(self.metric, self.mode)
+            if v is None:
+                continue
+            if best_v is None or (v > best_v if self.mode == "max" else v < best_v):
+                best, best_v = t, v
+        return best
+
+    def best_config(self) -> Optional[Dict[str, Any]]:
+        t = self.best_trial()
+        return dict(t.config) if t else None
+
+    def best_value(self) -> Optional[float]:
+        t = self.best_trial()
+        return t.best_value(self.metric, self.mode) if t else None
+
+    def results_table(self) -> List[Dict[str, Any]]:
+        rows = []
+        for t in self.trials:
+            rows.append({
+                "trial_id": t.trial_id,
+                "status": t.status.value,
+                "iterations": t.training_iteration,
+                "best": t.best_value(self.metric, self.mode),
+                "config": {k: v for k, v in t.config.items() if not k.startswith("_")},
+            })
+        return rows
+
+    def total_iterations(self) -> int:
+        return sum(t.training_iteration for t in self.trials)
+
+
+def run_experiments(
+    trainable: Union[str, type, Callable],
+    space: Optional[Dict[str, Any]] = None,
+    *,
+    scheduler: Optional[TrialScheduler] = None,
+    searcher: Optional[Searcher] = None,
+    num_samples: int = 1,
+    stop: Optional[Dict[str, float]] = None,
+    resources_per_trial: Optional[Resources] = None,
+    total_cpu: float = 64.0,
+    total_devices: int = 256,
+    slice_pool: Optional[Any] = None,
+    checkpoint_freq: int = 1,
+    log_dir: Optional[str] = None,
+    verbose: bool = False,
+    seed: int = 0,
+    max_steps: int = 10_000_000,
+    executor: Optional[TrialExecutor] = None,
+    metric: Optional[str] = None,
+    mode: Optional[str] = None,
+    resume: bool = False,
+) -> ExperimentAnalysis:
+    """Run one experiment to completion; returns an ExperimentAnalysis.
+
+    ``resume=True`` (requires ``log_dir``) restores the trial list of an
+    interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
+    kept, interrupted ones continue from their last durable checkpoint."""
+    scheduler = scheduler or FIFOScheduler()
+    metric = metric or scheduler.metric
+    mode = mode or scheduler.mode
+
+    # -- resolve trainable -------------------------------------------------------
+    if isinstance(trainable, str):
+        name = trainable
+        if name not in _REGISTRY:
+            raise KeyError(f"trainable {name!r} not registered")
+    else:
+        name = getattr(trainable, "__name__", "trainable")
+        register_trainable(name, trainable)
+
+    # -- plumbing ------------------------------------------------------------------
+    store = ObjectStore(spill_dir=os.path.join(log_dir, "spill") if log_dir else None)
+    ckpt_mgr = CheckpointManager(store,
+                                 dir=os.path.join(log_dir, "ckpt") if log_dir else None,
+                                 durable=log_dir is not None)
+    if executor is None:
+        executor = SerialMeshExecutor(
+            trainable_cls_resolver=_REGISTRY.__getitem__,
+            checkpoint_manager=ckpt_mgr,
+            total_cpu=total_cpu,
+            total_devices=total_devices,
+            slice_pool=slice_pool,
+            checkpoint_freq=checkpoint_freq,
+        )
+    loggers: List[Logger] = [ConsoleLogger(verbose=verbose)]
+    if log_dir:
+        loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
+        loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl")))
+    logger = CompositeLogger(loggers)
+
+    runner = TrialRunner(
+        scheduler=scheduler,
+        executor=executor,
+        searcher=searcher,
+        logger=logger,
+        trainable_name=name,
+        default_resources=resources_per_trial or Resources(),
+        stopping_criteria=stop,
+    )
+    if log_dir:
+        import weakref
+        loggers.append(_StatePersister(
+            os.path.join(log_dir, "experiment_state.pkl"), weakref.ref(runner)))
+
+    # -- initial trials ---------------------------------------------------------------
+    restored: List[Trial] = []
+    if resume:
+        if not log_dir:
+            raise ValueError("resume=True requires log_dir")
+        restored = load_experiment_state(log_dir)
+        for trial in restored:
+            trial.trainable_name = name  # rebind to this process's registration
+            runner.add_trial(trial)
+    if restored:
+        pass  # resumed experiments keep their original trial set
+    elif space is not None:
+        for config in generate_variants(space, num_samples=num_samples, seed=seed):
+            runner.add_trial(Trial(
+                config=config,
+                trainable_name=name,
+                resources=resources_per_trial or Resources(),
+                stopping_criteria=stop,
+                tag=format_variant_tag(config),
+            ))
+    elif searcher is None:
+        raise ValueError("provide a space, a searcher, or both")
+
+    trials = runner.run(max_steps=max_steps)
+    logger.close()
+    return ExperimentAnalysis(trials, metric=metric, mode=mode)

@@ -1,0 +1,139 @@
+"""Result loggers — the paper's "monitoring and visualization of trial progress".
+
+Console progress table (periodic, like Tune's reporter), per-trial CSV, and an
+experiment-level JSONL event log (the TensorBoard-integration analogue: any
+external tool can tail the JSONL).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional, TextIO
+
+from .trial import Result, Trial
+
+__all__ = ["Logger", "ConsoleLogger", "CSVLogger", "JSONLLogger", "CompositeLogger"]
+
+
+class Logger:
+    def on_result(self, trial: Trial, result: Result) -> None:
+        pass
+
+    def on_trial_complete(self, trial: Trial) -> None:
+        pass
+
+    def on_experiment_end(self, trials: List[Trial]) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class ConsoleLogger(Logger):
+    def __init__(self, interval_s: float = 5.0, stream: Optional[TextIO] = None, verbose: bool = True):
+        self.interval_s = interval_s
+        self.stream = stream or sys.stdout
+        self.verbose = verbose
+        self._last = 0.0
+        self._n_results = 0
+
+    def on_result(self, trial: Trial, result: Result) -> None:
+        self._n_results += 1
+        now = time.time()
+        if self.verbose and now - self._last >= self.interval_s:
+            self._last = now
+            metrics = ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in list(result.metrics.items())[:4]
+            )
+            print(
+                f"[tune] {trial.trial_id} iter={result.training_iteration} {metrics}",
+                file=self.stream,
+            )
+
+    def on_experiment_end(self, trials: List[Trial]) -> None:
+        if not self.verbose:
+            return
+        from .trial import TrialStatus
+
+        by_status: Dict[str, int] = {}
+        for t in trials:
+            by_status[t.status.value] = by_status.get(t.status.value, 0) + 1
+        print(f"[tune] experiment done: {len(trials)} trials, "
+              f"{self._n_results} results, status={by_status}", file=self.stream)
+
+
+class CSVLogger(Logger):
+    def __init__(self, dir: str):
+        self.dir = dir
+        self._writers: Dict[str, tuple] = {}
+
+    def on_result(self, trial: Trial, result: Result) -> None:
+        if trial.trial_id not in self._writers:
+            os.makedirs(self.dir, exist_ok=True)
+            f = open(os.path.join(self.dir, f"{trial.trial_id}.csv"), "w", newline="")
+            fields = ["training_iteration", "timestamp"] + sorted(result.metrics)
+            w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
+            w.writeheader()
+            self._writers[trial.trial_id] = (f, w)
+        f, w = self._writers[trial.trial_id]
+        row = {"training_iteration": result.training_iteration, "timestamp": result.timestamp}
+        row.update({k: v for k, v in result.metrics.items()})
+        w.writerow(row)
+
+    def close(self) -> None:
+        for f, _ in self._writers.values():
+            f.close()
+        self._writers.clear()
+
+
+class JSONLLogger(Logger):
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.f = open(path, "w")
+
+    def on_result(self, trial: Trial, result: Result) -> None:
+        self.f.write(json.dumps({
+            "event": "result",
+            "trial_id": trial.trial_id,
+            "iteration": result.training_iteration,
+            "config": {k: v for k, v in trial.config.items()
+                       if isinstance(v, (int, float, str, bool, type(None)))},
+            "metrics": {k: v for k, v in result.metrics.items()
+                        if isinstance(v, (int, float, str, bool, type(None)))},
+            "t": result.timestamp,
+        }) + "\n")
+
+    def on_trial_complete(self, trial: Trial) -> None:
+        self.f.write(json.dumps({
+            "event": "complete", "trial_id": trial.trial_id,
+            "status": trial.status.value, "iterations": trial.training_iteration,
+        }) + "\n")
+        self.f.flush()
+
+    def close(self) -> None:
+        self.f.close()
+
+
+class CompositeLogger(Logger):
+    def __init__(self, loggers: List[Logger]):
+        self.loggers = loggers
+
+    def on_result(self, trial, result):
+        for lg in self.loggers:
+            lg.on_result(trial, result)
+
+    def on_trial_complete(self, trial):
+        for lg in self.loggers:
+            lg.on_trial_complete(trial)
+
+    def on_experiment_end(self, trials):
+        for lg in self.loggers:
+            lg.on_experiment_end(trials)
+
+    def close(self):
+        for lg in self.loggers:
+            lg.close()

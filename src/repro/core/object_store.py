@@ -1,0 +1,96 @@
+"""In-memory object store — the ``ray.put``/``ray.get`` analogue (paper §4.3.2).
+
+Trials broadcast weights/datasets by putting them in the store and passing keys;
+PBT clones a trial by ``get``-ing the donor checkpoint.  Content lives in host
+memory with optional spill-to-disk for large or evicted entries.  Values are
+arbitrary pytrees; we deep-copy nothing — JAX arrays are immutable, so sharing
+references is safe and clone-by-reference is O(1) (a functional-state advantage
+over actor snapshots, noted in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import pickle
+from collections import OrderedDict
+from typing import Any, Optional
+
+__all__ = ["ObjectStore"]
+
+
+class ObjectStore:
+    def __init__(self, capacity_bytes: int = 2 << 30, spill_dir: Optional[str] = None):
+        self._mem: "OrderedDict[str, Any]" = OrderedDict()
+        self._sizes: dict = {}
+        self._capacity = capacity_bytes
+        self._used = 0
+        self._spill_dir = spill_dir
+        self._counter = itertools.count()
+        self.n_spilled = 0
+
+    def _estimate_size(self, value: Any) -> int:
+        import jax
+        import numpy as np
+
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(value):
+            if hasattr(leaf, "nbytes"):
+                total += int(leaf.nbytes)
+            else:
+                total += 64
+        return max(total, 64)
+
+    def put(self, value: Any, key: Optional[str] = None) -> str:
+        key = key or f"obj_{next(self._counter):08d}"
+        size = self._estimate_size(value)
+        self._evict_for(size)
+        if key in self._mem:
+            self._used -= self._sizes.get(key, 0)
+        self._mem[key] = value
+        self._sizes[key] = size
+        self._used += size
+        self._mem.move_to_end(key)
+        return key
+
+    def get(self, key: str) -> Any:
+        if key in self._mem:
+            self._mem.move_to_end(key)  # LRU touch
+            return self._mem[key]
+        path = self._spill_path(key)
+        if path and os.path.exists(path):
+            with open(path, "rb") as f:
+                return pickle.load(f)
+        raise KeyError(f"object {key!r} not in store")
+
+    def contains(self, key: str) -> bool:
+        path = self._spill_path(key)
+        return key in self._mem or bool(path and os.path.exists(path))
+
+    def delete(self, key: str) -> None:
+        if key in self._mem:
+            self._used -= self._sizes.pop(key, 0)
+            del self._mem[key]
+        path = self._spill_path(key)
+        if path and os.path.exists(path):
+            os.remove(path)
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used
+
+    # -- eviction / spill ------------------------------------------------------
+    def _spill_path(self, key: str) -> Optional[str]:
+        if not self._spill_dir:
+            return None
+        return os.path.join(self._spill_dir, f"{key}.pkl")
+
+    def _evict_for(self, incoming: int) -> None:
+        while self._mem and self._used + incoming > self._capacity:
+            key, value = self._mem.popitem(last=False)  # LRU
+            self._used -= self._sizes.pop(key, 0)
+            path = self._spill_path(key)
+            if path:
+                os.makedirs(self._spill_dir, exist_ok=True)
+                with open(path, "wb") as f:
+                    pickle.dump(value, f)
+                self.n_spilled += 1

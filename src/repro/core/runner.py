@@ -1,0 +1,203 @@
+"""TrialRunner — the event loop wiring trials, scheduler, searcher and executor.
+
+One ``step()`` = (1) launch trials while the scheduler offers one and resources
+allow (pulling fresh suggestions from the searcher when the explicit trial list
+is exhausted); (2) collect the next intermediate result; (3) let the scheduler
+decide CONTINUE / PAUSE / STOP / RESTART_WITH_CONFIG and apply it.  Trial
+metadata is kept in memory; fault tolerance is via checkpoints (paper §4.2).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional
+
+from .executor import TrialExecutor
+from .loggers import Logger
+from .resources import Resources
+from .schedulers.base import SchedulerDecision, TrialScheduler
+from .search.basic import Searcher
+from .trial import Result, Trial, TrialStatus
+
+__all__ = ["TrialRunner"]
+
+
+class TrialRunner:
+    def __init__(
+        self,
+        scheduler: TrialScheduler,
+        executor: TrialExecutor,
+        searcher: Optional[Searcher] = None,
+        logger: Optional[Logger] = None,
+        trainable_name: str = "trainable",
+        default_resources: Optional[Resources] = None,
+        stopping_criteria: Optional[Dict[str, float]] = None,
+        max_pending_from_searcher: int = 0,  # 0 = unlimited
+        max_failures: int = 0,
+    ):
+        self.scheduler = scheduler
+        self.executor = executor
+        self.searcher = searcher
+        self.logger = logger or Logger()
+        self.trainable_name = trainable_name
+        self.default_resources = default_resources or Resources()
+        self.stopping_criteria = dict(stopping_criteria or {})
+        self.max_pending_from_searcher = max_pending_from_searcher
+        self.max_failures = max_failures
+        self.trials: List[Trial] = []
+        self._by_id: Dict[str, Trial] = {}
+        self._searcher_exhausted = searcher is None
+        self._suggest_counter = itertools.count()
+        self.n_errors = 0
+
+    # -- trial management ------------------------------------------------------
+    def add_trial(self, trial: Trial) -> None:
+        self.trials.append(trial)
+        self._by_id[trial.trial_id] = trial
+        self.scheduler.on_trial_add(self, trial)
+
+    def get_trial(self, trial_id: str) -> Optional[Trial]:
+        return self._by_id.get(trial_id)
+
+    def has_resources(self, trial: Trial) -> bool:
+        return self.executor.has_resources(trial)
+
+    def stop_trial(self, trial: Trial) -> None:
+        self.executor.stop_trial(trial)
+        self.scheduler.on_trial_complete(self, trial)
+        self.logger.on_trial_complete(trial)
+        self._observe(trial, final=True)
+
+    # -- searcher integration ----------------------------------------------------
+    def _maybe_suggest(self) -> Optional[Trial]:
+        if self._searcher_exhausted:
+            return None
+        live = sum(1 for t in self.trials if not t.status.is_finished())
+        if self.max_pending_from_searcher and live >= self.max_pending_from_searcher:
+            return None
+
+        # Only pull a suggestion when it can actually start now: suggesting
+        # ahead of capacity would drain the searcher before any results come
+        # back, degrading TPE/BayesOpt to random search.
+        class _Probe:
+            resources = self.default_resources
+        if not self.executor.has_resources(_Probe()):
+            return None
+        trial_id = f"{self.trainable_name}_sugg_{next(self._suggest_counter):05d}"
+        config = self.searcher.suggest(trial_id)
+        if config is None:
+            self._searcher_exhausted = True
+            return None
+        trial = Trial(
+            config=config,
+            trainable_name=self.trainable_name,
+            resources=self.default_resources,
+            stopping_criteria=self.stopping_criteria,
+            trial_id=trial_id,
+        )
+        self.add_trial(trial)
+        return trial
+
+    def _observe(self, trial: Trial, final: bool) -> None:
+        if self.searcher is None or trial.last_result is None:
+            return
+        metric = self.searcher.metric
+        if metric in trial.last_result.metrics:
+            self.searcher.observe(
+                trial.trial_id, trial.config, trial.last_result.value(metric), final
+            )
+
+    # -- main loop -----------------------------------------------------------------
+    def is_finished(self) -> bool:
+        if self.executor.has_running():
+            return False
+        if any(t.status in (TrialStatus.PENDING, TrialStatus.PAUSED) and self.has_resources(t)
+               for t in self.trials):
+            return False
+        if not self._searcher_exhausted:
+            return False
+        return True
+
+    def _launch_loop(self) -> None:
+        while True:
+            trial = self.scheduler.choose_trial_to_run(self)
+            if trial is None:
+                suggested = self._maybe_suggest()
+                if suggested is None:
+                    return
+                trial = self.scheduler.choose_trial_to_run(self)
+                if trial is None:
+                    return
+            checkpoint = trial.checkpoint if trial.status == TrialStatus.PAUSED else None
+            ok = self.executor.start_trial(trial, checkpoint=checkpoint)
+            if not ok:
+                if trial.status == TrialStatus.ERROR:
+                    self.n_errors += 1
+                    self.scheduler.on_trial_error(self, trial)
+                    self._observe(trial, final=True)
+                    continue
+                return  # no resources after all
+
+    def step(self) -> bool:
+        """Process one event. Returns False when the experiment is finished."""
+        self._launch_loop()
+        event = self.executor.get_next_result()
+        if event is None:
+            if not self.is_finished():
+                self._stall_count = getattr(self, "_stall_count", 0) + 1
+                if self._stall_count > 3:
+                    stuck = [t.trial_id for t in self.trials
+                             if t.status in (TrialStatus.PENDING, TrialStatus.PAUSED)]
+                    raise RuntimeError(
+                        f"trial runner stalled: no runnable events but experiment "
+                        f"not finished (stuck trials: {stuck}); scheduler deadlock?"
+                    )
+                return True
+            return False
+        self._stall_count = 0
+        trial, payload = event
+
+        if isinstance(payload, Exception):
+            self.n_errors += 1
+            self.executor.stop_trial(trial, error=str(payload))
+            self.scheduler.on_trial_error(self, trial)
+            self._observe(trial, final=True)
+            return not self.is_finished()
+
+        result: Result = payload
+        trial.record_result(result)
+        self.logger.on_result(trial, result)
+
+        if result.done or trial.should_stop(result):
+            self.stop_trial(trial)
+            return not self.is_finished()
+
+        decision = self.scheduler.on_result(self, trial, result)
+        self._observe(trial, final=False)
+        self._apply(trial, decision)
+        return not self.is_finished()
+
+    def _apply(self, trial: Trial, decision: SchedulerDecision) -> None:
+        if decision == SchedulerDecision.CONTINUE:
+            return
+        if decision == SchedulerDecision.PAUSE:
+            self.executor.pause_trial(trial)
+        elif decision == SchedulerDecision.STOP:
+            self.stop_trial(trial)
+        elif decision == SchedulerDecision.RESTART_WITH_CONFIG:
+            ckpt = trial.scheduler_state.pop("restore_from", None)
+            new_config = trial.scheduler_state.pop("new_config", None)
+            if ckpt is None or new_config is None:
+                raise RuntimeError(
+                    "RESTART_WITH_CONFIG requires scheduler_state['restore_from'/'new_config']"
+                )
+            self.executor.restart_trial_with_config(trial, ckpt, new_config)
+        else:
+            raise ValueError(f"unknown scheduler decision {decision}")
+
+    def run(self, max_steps: int = 10_000_000) -> List[Trial]:
+        steps = 0
+        while steps < max_steps and self.step():
+            steps += 1
+        self.executor.shutdown()
+        self.logger.on_experiment_end(self.trials)
+        return self.trials

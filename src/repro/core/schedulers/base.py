@@ -1,0 +1,74 @@
+"""Trial scheduler API — the paper's §4.2 primary interface.
+
+    class TrialScheduler:
+        def on_result(self, trial, result): ...
+        def choose_trial_to_run(self): ...
+
+Event-based: the runner calls ``choose_trial_to_run`` when resources free up,
+and ``on_result`` for every intermediate result; the scheduler returns a flag —
+CONTINUE, PAUSE (checkpoint + yield resources), STOP, or RESTART_WITH_CONFIG
+(restore from a checkpoint with an updated hyperparameter map — the paper's
+"restart a trial with an updated hyperparameter configuration", used by PBT).
+"""
+from __future__ import annotations
+
+import enum
+from typing import List, Optional, TYPE_CHECKING
+
+from ..trial import Result, Trial, TrialStatus
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..runner import TrialRunner
+
+__all__ = ["SchedulerDecision", "TrialScheduler"]
+
+
+class SchedulerDecision(str, enum.Enum):
+    CONTINUE = "CONTINUE"
+    PAUSE = "PAUSE"
+    STOP = "STOP"
+    RESTART_WITH_CONFIG = "RESTART_WITH_CONFIG"  # new config staged on the trial
+
+
+class TrialScheduler:
+    """Base scheduler. Subclasses override on_result / choose_trial_to_run."""
+
+    def __init__(self, metric: str = "loss", mode: str = "min"):
+        if mode not in ("min", "max"):
+            raise ValueError("mode must be 'min' or 'max'")
+        self.metric = metric
+        self.mode = mode
+
+    # score such that HIGHER is always better internally
+    def _score(self, value: float) -> float:
+        return value if self.mode == "max" else -value
+
+    # -- lifecycle events -------------------------------------------------------
+    def on_trial_add(self, runner: "TrialRunner", trial: Trial) -> None:
+        pass
+
+    def on_trial_error(self, runner: "TrialRunner", trial: Trial) -> None:
+        pass
+
+    def on_result(self, runner: "TrialRunner", trial: Trial, result: Result) -> SchedulerDecision:
+        """Called for every intermediate result. Default: run to completion."""
+        return SchedulerDecision.CONTINUE
+
+    def on_trial_complete(self, runner: "TrialRunner", trial: Trial) -> None:
+        pass
+
+    def choose_trial_to_run(self, runner: "TrialRunner") -> Optional[Trial]:
+        """Pick the next trial to (re)launch given free resources.
+
+        Default policy: any PENDING trial, then any PAUSED trial (FIFO order).
+        """
+        for trial in runner.trials:
+            if trial.status == TrialStatus.PENDING and runner.has_resources(trial):
+                return trial
+        for trial in runner.trials:
+            if trial.status == TrialStatus.PAUSED and runner.has_resources(trial):
+                return trial
+        return None
+
+    def debug_string(self) -> str:
+        return type(self).__name__

@@ -1,0 +1,14 @@
+"""FIFO — the trivial scheduler (paper Table 1: 10 LoC).
+
+Runs each trial to its stopping condition; launches trials in parallel when
+resources allow (that part is the runner's job).  All logic is the base class.
+"""
+from __future__ import annotations
+
+from .base import TrialScheduler
+
+__all__ = ["FIFOScheduler"]
+
+
+class FIFOScheduler(TrialScheduler):
+    pass

@@ -1,0 +1,65 @@
+"""Searcher interface + random/grid searchers.
+
+The paper folds search algorithms into schedulers ("they can add to the list of
+trials to execute (e.g., based on suggestions from HyperOpt)" §4.2).  We keep a
+small ``Searcher`` interface (suggest/observe) and an adapter scheduler
+(``SearchAlgorithmScheduler``) that feeds suggestions into the runner as
+capacity frees up — so any Searcher composes with any TrialScheduler's
+early-stopping behaviour.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .space import sample_space
+from .variants import generate_variants
+
+__all__ = ["Searcher", "RandomSearcher", "GridSearcher"]
+
+
+class Searcher:
+    def __init__(self, space: Dict[str, Any], metric: str = "loss", mode: str = "min"):
+        self.space = space
+        self.metric = metric
+        self.mode = mode
+
+    def suggest(self, trial_id: str) -> Optional[Dict[str, Any]]:
+        """Return the next config to try, or None when exhausted."""
+        raise NotImplementedError
+
+    def observe(self, trial_id: str, config: Dict[str, Any], value: float, final: bool) -> None:
+        """Feed back an observed metric value for a suggested config."""
+
+    def _score(self, value: float) -> float:
+        return value if self.mode == "max" else -value
+
+
+class RandomSearcher(Searcher):
+    def __init__(self, space, metric="loss", mode="min", max_trials: int = 0, seed: int = 0):
+        super().__init__(space, metric, mode)
+        self.max_trials = max_trials
+        self._rng = np.random.default_rng(seed)
+        self._count = 0
+
+    def suggest(self, trial_id: str) -> Optional[Dict[str, Any]]:
+        if self.max_trials and self._count >= self.max_trials:
+            return None
+        self._count += 1
+        return sample_space(self.space, self._rng)
+
+
+class GridSearcher(Searcher):
+    """Exhausts the grid cross-product (stochastic domains sampled once each)."""
+
+    def __init__(self, space, metric="loss", mode="min", num_samples: int = 1, seed: int = 0):
+        super().__init__(space, metric, mode)
+        self._it = generate_variants(space, num_samples=num_samples, seed=seed)
+
+    def suggest(self, trial_id: str) -> Optional[Dict[str, Any]]:
+        try:
+            return next(self._it)
+        except StopIteration:
+            return None

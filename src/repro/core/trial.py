@@ -1,0 +1,141 @@
+"""Trial, Result and Checkpoint — the paper's §3 vocabulary.
+
+A *trial* is a single training run with a fixed initial hyperparameter
+configuration; an *experiment* is a collection of trials supervised by a trial
+scheduler.  Trials carry:
+
+- ``config``     — the hyperparameter map handed to the trainable,
+- ``status``     — PENDING / RUNNING / PAUSED / TERMINATED / ERROR,
+- ``resources``  — the slice request (see resources.py),
+- a result history (intermediate results are first-class: schedulers make
+  early-stopping / cloning / mutation decisions from them),
+- the latest checkpoint reference (fault tolerance is checkpoint-based; trial
+  metadata itself lives in memory, per the paper §4.2).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .resources import Resources
+
+__all__ = ["Trial", "TrialStatus", "Result", "Checkpoint"]
+
+_trial_counter = itertools.count()
+
+
+class TrialStatus(str, enum.Enum):
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    PAUSED = "PAUSED"
+    TERMINATED = "TERMINATED"
+    ERROR = "ERROR"
+
+    def is_finished(self) -> bool:
+        return self in (TrialStatus.TERMINATED, TrialStatus.ERROR)
+
+
+@dataclass
+class Result:
+    """One intermediate (or final) report from a trial.
+
+    ``metrics`` carries whatever the user reported (``tune.report(...)``).
+    ``training_iteration`` is maintained by the framework and is the canonical
+    resource/rung axis for HyperBand/ASHA/median-stopping.
+    """
+
+    trial_id: str
+    training_iteration: int
+    metrics: Dict[str, Any]
+    timestamp: float = field(default_factory=time.time)
+    done: bool = False
+
+    def value(self, metric: str) -> float:
+        if metric == "training_iteration":
+            return float(self.training_iteration)
+        v = self.metrics[metric]
+        return float(v)
+
+
+@dataclass
+class Checkpoint:
+    """A reference to saved trial state (object-store key or disk path)."""
+
+    trial_id: str
+    training_iteration: int
+    store_key: Optional[str] = None
+    path: Optional[str] = None
+
+    @property
+    def location(self) -> str:
+        return self.store_key or self.path or "<empty>"
+
+
+class Trial:
+    def __init__(
+        self,
+        config: Dict[str, Any],
+        trainable_name: str = "trainable",
+        resources: Optional[Resources] = None,
+        stopping_criteria: Optional[Dict[str, float]] = None,
+        tag: str = "",
+        trial_id: Optional[str] = None,
+    ):
+        self.trial_id = trial_id or f"{trainable_name}_{next(_trial_counter):05d}"
+        self.trainable_name = trainable_name
+        self.config = dict(config)
+        self.resources = resources or Resources()
+        self.stopping_criteria = dict(stopping_criteria or {})
+        self.tag = tag
+        self.status = TrialStatus.PENDING
+        self.results: List[Result] = []
+        self.checkpoint: Optional[Checkpoint] = None
+        self.error: Optional[str] = None
+        self.start_time: Optional[float] = None
+        # bookkeeping for schedulers (e.g. PBT perturbation history)
+        self.scheduler_state: Dict[str, Any] = {}
+
+    # -- result bookkeeping ---------------------------------------------------
+    @property
+    def last_result(self) -> Optional[Result]:
+        return self.results[-1] if self.results else None
+
+    @property
+    def training_iteration(self) -> int:
+        return self.results[-1].training_iteration if self.results else 0
+
+    def record_result(self, result: Result) -> None:
+        self.results.append(result)
+
+    def best_value(self, metric: str, mode: str = "max") -> Optional[float]:
+        vals = [r.value(metric) for r in self.results if metric in r.metrics]
+        if not vals:
+            return None
+        return max(vals) if mode == "max" else min(vals)
+
+    def should_stop(self, result: Result) -> bool:
+        """Check user-provided stopping criteria (e.g. max iterations, target acc)."""
+        for metric, bound in self.stopping_criteria.items():
+            if metric == "training_iteration":
+                if result.training_iteration >= bound:
+                    return True
+            elif metric in result.metrics and result.value(metric) >= bound:
+                return True
+        return False
+
+    def set_status(self, status: TrialStatus) -> None:
+        if self.status.is_finished() and status == TrialStatus.RUNNING:
+            raise RuntimeError(f"cannot restart finished trial {self.trial_id}")
+        if status == TrialStatus.RUNNING and self.start_time is None:
+            self.start_time = time.time()
+        self.status = status
+
+    def __repr__(self) -> str:
+        return (
+            f"Trial({self.trial_id}, {self.status.value}, iter={self.training_iteration}"
+            + (f", tag={self.tag}" if self.tag else "")
+            + ")"
+        )

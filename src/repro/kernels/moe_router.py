@@ -1,0 +1,70 @@
+"""Fused MoE router Pallas kernel: softmax -> top-k -> renormalize.
+
+Grid (nT,): each program routes a block of tokens.  The expert axis (<= a few
+hundred) fits a lane tile, so softmax is one VPU pass; top-k (k <= 8) is k
+iterations of argmax+mask — cheaper than a full sort and fused with the
+softmax, saving two HBM round-trips of the (T, E) probability tensor that the
+unfused jnp path (softmax -> lax.top_k) makes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["moe_router_pallas", "DEFAULT_BLOCK_T"]
+
+DEFAULT_BLOCK_T = 256
+
+
+def _kernel(logits_ref, w_ref, idx_ref, *, top_k: int):
+    logits = logits_ref[...].astype(jnp.float32)       # (bt, E)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / p.sum(axis=-1, keepdims=True)
+
+    bt, E = probs.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    ws, idxs = [], []
+    for _ in range(top_k):
+        w = probs.max(axis=-1)
+        i = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+        ws.append(w)
+        idxs.append(i)
+        probs = jnp.where(iota == i[:, None], -1.0, probs)
+    w = jnp.stack(ws, axis=-1)                         # (bt, k)
+    idx = jnp.stack(idxs, axis=-1)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+    w_ref[...] = w
+    idx_ref[...] = idx
+
+
+def moe_router_pallas(
+    logits: jax.Array, top_k: int,
+    block_t: int = DEFAULT_BLOCK_T, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """logits (T, E) -> (weights (T, k) fp32, idx (T, k) int32).  T % block_t
+    == 0 (ops.py pads)."""
+    T, E = logits.shape
+    block_t = min(block_t, T)
+    if T % block_t:
+        raise ValueError(f"T={T} must divide block_t={block_t}")
+
+    kernel = functools.partial(_kernel, top_k=top_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // block_t,),
+        in_specs=[pl.BlockSpec((block_t, E), lambda ti: (ti, 0))],
+        out_specs=[
+            pl.BlockSpec((block_t, top_k), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, top_k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each mirrors its kernel's exact contract (shapes, dtypes, masking rules) with
+straightforward jnp code — no blocking, no VMEM tiling, no online softmax.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "rglru_scan_ref",
+           "moe_router_ref"]
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_pos: jax.Array, k_pos: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """q (B,Sq,H,hd); k/v (B,Sk,K,hd); q_pos (B,Sq); k_pos (B,Sk) -> (B,Sq,H,hd).
+
+    GQA via head grouping; invalid cache slots are k_pos < 0."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    ok = k_pos[:, None, :] >= 0
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    logits = jnp.where(ok[:, None, None, :, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - jnp.maximum(m, -1e30))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+    u: jax.Array, state: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential RWKV-6 WKV recurrence.
+
+    r/k/v (B,S,H,N); logw (B,S,H,N) fp32 log-decay; u (H,N); state (B,H,N,N)
+    fp32.  y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1}
+    + k_t v_t^T.  Returns (y (B,S,H,N), final state)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (rf, kf, vf, logw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), state
+
+
+def rglru_scan_ref(
+    a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t.  a/b (B,S,R) fp32;
+    h0 (B,R) or None.  Returns h (B,S,R)."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+    h_init = h0 if h0 is not None else jnp.zeros_like(b[:, 0])
+    _, hs = jax.lax.scan(step, h_init,
+                         (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def moe_router_ref(
+    logits: jax.Array, top_k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Softmax over experts -> top-k -> renormalize (DeepSeek convention).
+
+    logits (T, E) -> (weights (T, k) fp32, idx (T, k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device state.
+Target: TPU v5e, 256 chips/pod; single-pod (16, 16) = (data, model), multi-pod
+(2, 16, 16) = (pod, data, model).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+    PEAK_FLOPS_BF16 = 197e12       # per chip
+    HBM_BW = 819e9                 # bytes/s per chip
+    ICI_BW = 50e9                  # bytes/s per link
+    HBM_BYTES = 16 * 2**30         # 16 GiB per chip
+    CHIPS_PER_POD = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh with Auto axis types (e.g. trial sub-meshes)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

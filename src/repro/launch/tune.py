@@ -1,0 +1,111 @@
+"""Distributed hyperparameter search launcher — the paper's workload.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
+        --scheduler asha --num-samples 16 --max-iters 20
+
+Runs a Tune experiment over a model's optimizer hyperparameters with any of
+the six built-in schedulers, optionally driven by a searcher (TPE/random),
+with trials placed on mesh slices via the SlicePool.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from ..configs import get_config, list_archs
+from ..core import (ASHAScheduler, FIFOScheduler, GPSearcher,
+                    HyperBandScheduler, MedianStoppingRule,
+                    PopulationBasedTraining, Resources, TPESearcher,
+                    RandomSearcher, loguniform, run_experiments, uniform)
+from ..dist.submesh import SlicePool
+from ..train.trainable import make_model_trainable
+
+
+def build_scheduler(name: str, max_iters: int):
+    if name == "fifo":
+        return FIFOScheduler(metric="loss", mode="min")
+    if name == "asha":
+        return ASHAScheduler(metric="loss", mode="min", max_t=max_iters,
+                             grace_period=max(1, max_iters // 8),
+                             reduction_factor=3)
+    if name == "hyperband":
+        return HyperBandScheduler(metric="loss", mode="min", max_t=max_iters)
+    if name == "median":
+        return MedianStoppingRule(metric="loss", mode="min", grace_period=2)
+    if name == "pbt":
+        return PopulationBasedTraining(
+            metric="loss", mode="min",
+            perturbation_interval=max(2, max_iters // 5),
+            hyperparam_mutations={"lr": loguniform(1e-4, 1e-1)})
+    raise ValueError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--scheduler", default="asha",
+                    choices=["fifo", "asha", "hyperband", "median", "pbt"])
+    ap.add_argument("--searcher", default=None, choices=[None, "tpe", "gp", "random"])
+    ap.add_argument("--num-samples", type=int, default=8)
+    ap.add_argument("--max-iters", type=int, default=10)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--steps-per-iter", type=int, default=3)
+    ap.add_argument("--devices-per-trial", type=int, default=8)
+    ap.add_argument("--total-devices", type=int, default=256)
+    ap.add_argument("--log-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    trainable = make_model_trainable(
+        cfg, batch=args.batch, seq_len=args.seq_len,
+        steps_per_iter=args.steps_per_iter,
+        total_steps=args.max_iters * args.steps_per_iter)
+
+    space = {"lr": loguniform(1e-4, 1e-1), "warmup": 5,
+             "weight_decay": uniform(0.0, 0.2)}
+    searcher = None
+    if args.searcher == "tpe":
+        searcher = TPESearcher(space, metric="loss", mode="min",
+                               max_trials=args.num_samples, seed=args.seed)
+    elif args.searcher == "gp":
+        searcher = GPSearcher(space, metric="loss", mode="min",
+                              max_trials=args.num_samples, seed=args.seed)
+    elif args.searcher == "random":
+        searcher = RandomSearcher(space, metric="loss", mode="min",
+                                  max_trials=args.num_samples, seed=args.seed)
+
+    pool = SlicePool(n_virtual=args.total_devices)
+    analysis = run_experiments(
+        trainable,
+        None if searcher else space,
+        scheduler=build_scheduler(args.scheduler, args.max_iters),
+        searcher=searcher,
+        num_samples=args.num_samples if not searcher else 1,
+        stop={"training_iteration": args.max_iters},
+        resources_per_trial=Resources(cpu=1, devices=args.devices_per_trial),
+        total_devices=args.total_devices,
+        slice_pool=pool,
+        log_dir=args.log_dir,
+        verbose=True,
+        seed=args.seed,
+    )
+
+    print("\n[tune] results:")
+    for row in analysis.results_table():
+        cfg_str = {k: (round(v, 5) if isinstance(v, float) else v)
+                   for k, v in row["config"].items()
+                   if isinstance(v, (int, float, str))}
+        print(f"  {row['trial_id']}: {row['status']:10s} iters={row['iterations']:3d} "
+              f"best={row['best']:.4f} {cfg_str}")
+    print(f"[tune] best config: {json.dumps({k: v for k, v in analysis.best_config().items() if isinstance(v, (int, float, str))})}")
+    print(f"[tune] best loss:   {analysis.best_value():.4f}")
+    print(f"[tune] total training iterations across trials: {analysis.total_iterations()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Decode-time state: full KV caches, sliding-window (ring) caches, recurrent
+states.  Decode is synchronized across the batch (one global position), the
+standard TPU serving layout: caches are dense arrays indexed by a scalar step.
+
+Cache pytrees are built per *segment* (see transformer.py): leading axis is the
+segment's repeat count so they scan together with the stacked layer params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv6_mod
+
+Params = Dict[str, Any]
+
+
+def init_block_state(cfg: ModelConfig, block_type: str, batch: int,
+                     max_len: int) -> Optional[Dict[str, jax.Array]]:
+    """Fresh decode state for one block. max_len = cache capacity (full attn)
+    or ignored (window/recurrent)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    K, hd = cfg.kv_heads, cfg.hd
+    if block_type == "attention":
+        cap = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+        return {
+            "k": jnp.zeros((batch, cap, K, hd), adt),
+            "v": jnp.zeros((batch, cap, K, hd), adt),
+            "kpos": jnp.full((cap,), -1, jnp.int32),
+        }
+    if block_type == "local_attn":
+        cap = min(cfg.sliding_window or 2048, max_len)
+        return {
+            "k": jnp.zeros((batch, cap, K, hd), adt),
+            "v": jnp.zeros((batch, cap, K, hd), adt),
+            "kpos": jnp.full((cap,), -1, jnp.int32),
+        }
+    if block_type == "rglru":
+        return rglru_mod.init_state(cfg, batch)
+    if block_type == "rwkv6":
+        return rwkv6_mod.init_state(cfg, batch)
+    raise ValueError(f"unknown block type {block_type}")
+
+
+def update_attn_cache(cache: Dict[str, jax.Array], k_new: jax.Array, v_new: jax.Array,
+                      positions: jax.Array) -> Dict[str, jax.Array]:
+    """Write S_new freshly-computed (post-RoPE) k/v at their positions.
+
+    Ring-buffer semantics: slot = position % capacity.  For a full cache the
+    capacity >= max sequence length so slots never collide; for a sliding
+    window the oldest entries are overwritten — exactly the tokens that fell
+    out of the window.  When writing more tokens than the capacity (window
+    prefill) only the last ``cap`` are written, keeping scatter indices unique
+    (the earlier ones would be overwritten anyway).
+    """
+    cap = cache["k"].shape[1]
+    S = k_new.shape[1]
+    if S >= cap:
+        k_new, v_new = k_new[:, -cap:], v_new[:, -cap:]
+        pos_vec = positions[0, -cap:]
+    else:
+        pos_vec = positions[0]  # synchronized decode: same positions per batch row
+    slots = pos_vec % cap
+    k = cache["k"].at[:, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, slots].set(v_new.astype(cache["v"].dtype))
+    kpos = cache["kpos"].at[slots].set(pos_vec)
+    return {"k": k, "v": v, "kpos": kpos}
+
+
+def attn_cache_views(cache: Dict[str, jax.Array], batch: int) -> Tuple[Tuple[jax.Array, jax.Array], jax.Array]:
+    """Return ((k_all, v_all), k_positions (B, cap)) for attention()."""
+    kpos = jnp.broadcast_to(cache["kpos"][None, :], (batch, cache["kpos"].shape[0]))
+    return (cache["k"], cache["v"]), kpos

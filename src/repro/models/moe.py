@@ -1,0 +1,196 @@
+"""Fine-grained Mixture-of-Experts (DeepSeek-MoE / Granite-MoE style).
+
+TPU-native GShard/Switch dispatch: tokens are split into groups; within each
+group a capacity-bounded one-hot dispatch tensor routes tokens to experts via
+einsum.  When the expert axis is sharded over ``model`` (expert parallelism)
+GSPMD lowers the dispatch/combine einsums to all-to-alls — the collective
+pattern the roofline analysis watches.
+
+Routing: softmax over all experts -> top-k -> renormalize over the selected k
+(DeepSeek-MoE convention).  Shared experts (always-on) are a plain dense MLP
+added to the routed output.  Aux load-balance loss is Switch-style
+``E * sum_e f_e * p_e``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import _dense_init, apply_mlp, init_mlp
+
+Params = Dict[str, Any]
+
+
+def init_moe_layer(key, cfg: ModelConfig) -> Params:
+    assert cfg.moe is not None
+    moe = cfg.moe
+    dtype = jnp.dtype(cfg.param_dtype)
+    D, E, Fe = cfg.d_model, moe.n_experts, moe.d_expert
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _dense_init(ks[0], (D, E), dtype, scale=0.02),
+        "experts": {
+            "w_gate": _dense_init(ks[1], (E, D, Fe), dtype),
+            "w_up": _dense_init(ks[2], (E, D, Fe), dtype),
+            "w_down": _dense_init(ks[3], (E, Fe, D), dtype),
+        },
+    }
+    if moe.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=moe.n_shared * moe.d_expert)
+    return p
+
+
+def _route(logits: jax.Array, moe: MoEConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits (G, S, E) -> (weights (G,S,k), expert_idx (G,S,k), probs (G,S,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, moe.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return top_w, top_idx, probs
+
+
+def _dispatch_tensors(top_w, top_idx, moe: MoEConfig, S: int) -> Tuple[jax.Array, jax.Array]:
+    """Build capacity-bounded dispatch/combine tensors.
+
+    top_w/top_idx: (G, S, k).  Returns:
+      dispatch (G, S, E, C) one-hot float — token s of group g goes to slot c of expert e
+      combine  (G, S, E, C) — dispatch * routing weight
+    Tokens overflowing expert capacity C are dropped (standard GShard).
+    """
+    E = moe.n_experts
+    C = max(1, int(math.ceil(S * moe.top_k / E * moe.capacity_factor)))
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)          # (G,S,k,E)
+    # position of each (token, k) among that expert's tokens, in token order
+    flat = onehot.reshape(onehot.shape[0], -1, E)                    # (G, S*k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                            # (G, S*k, E)
+    pos = pos.reshape(onehot.shape)                                  # (G,S,k,E)
+    in_cap = (pos < C).astype(jnp.float32) * onehot
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # (G,S,k,E,C)
+    disp_k = in_cap[..., None] * slot                                # (G,S,k,E,C)
+    dispatch = disp_k.sum(2)                                         # (G,S,E,C)
+    combine = (disp_k * top_w[..., None, None]).sum(2)               # (G,S,E,C)
+    return dispatch, combine
+
+
+def _rank_within_expert(e_flat: jax.Array) -> jax.Array:
+    """e_flat (G, N) expert ids -> rank of each token among same-expert tokens.
+
+    Sort-based: O(N log N) with (G, N) intermediates only — avoids the
+    (G, N, E) one-hot cumsum of the einsum path entirely."""
+    G, N = e_flat.shape
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    es = jnp.take_along_axis(e_flat, order, axis=1)
+    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (G, N))
+    first = jnp.concatenate(
+        [jnp.ones((G, 1), bool), es[:, 1:] != es[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(first, idx, 0), axis=1)
+    rank_sorted = idx - seg_start
+    inv = jnp.argsort(order, axis=1)  # scatter ranks back to token order
+    return jnp.take_along_axis(rank_sorted, inv, axis=1)
+
+
+def _apply_moe_scatter(p: Params, xg: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Sort/scatter dispatch (§Perf iteration): no (G,S,E,C) one-hot tensors.
+
+    xg (G, S, D) -> (out (G, S, D), aux).  Token slots are computed by ranking
+    tokens within their expert (sort-based), then a batched scatter builds the
+    (G, E*C, D) expert buffers directly and a gather applies the combine
+    weights.  Buffer cost is O(tokens * k * cf * D) — the expert-input tensor
+    that any capacity MoE needs — instead of O(tokens * E * C) dispatch masks.
+    """
+    moe = cfg.moe
+    G, S, D = xg.shape
+    E, k = moe.n_experts, moe.top_k
+    C = max(1, int(math.ceil(S * k / E * moe.capacity_factor)))
+    dtype = xg.dtype
+
+    router_dtype = jnp.dtype(moe.router_dtype)
+    logits = xg.astype(router_dtype) @ p["router"].astype(router_dtype)
+    top_w, top_idx, probs = _route(logits, moe)                 # (G,S,k) x2, (G,S,E)
+
+    e_flat = top_idx.reshape(G, S * k).astype(jnp.int32)
+    rank = _rank_within_expert(e_flat)                          # (G, S*k)
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)            # trash slot E*C
+
+    x_rep = jnp.repeat(xg, k, axis=1)                           # (G, S*k, D)
+
+    def scatter_one(slots, xr):
+        return jnp.zeros((E * C + 1, D), dtype).at[slots].set(xr)
+
+    buf = jax.vmap(scatter_one)(slot, x_rep)                    # (G, E*C+1, D)
+    expert_in = buf[:, :E * C].reshape(G, E, C, D)
+
+    we = p["experts"]
+    h_gate = jnp.einsum("gecd,edf->gecf", expert_in, we["w_gate"].astype(dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", expert_in, we["w_up"].astype(dtype))
+    act = jax.nn.silu(h_gate) if cfg.activation == "swiglu" else \
+        jax.nn.gelu(h_gate, approximate=True)
+    expert_out = jnp.einsum("gecf,efd->gecd", act * h_up, we["w_down"].astype(dtype))
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(G, E * C, D), jnp.zeros((G, 1, D), dtype)], axis=1)
+    y_k = jax.vmap(lambda of, sl: of[sl])(out_flat, slot)       # (G, S*k, D)
+    y = (y_k.reshape(G, S, k, D)
+         * top_w.reshape(G, S, k, 1).astype(dtype)).sum(axis=2)
+
+    # aux load-balance: dispatched fraction per expert via scatter-add counts
+    counts = jnp.zeros((G, E), jnp.float32).at[
+        jnp.arange(G)[:, None], e_flat].add(keep.astype(jnp.float32))
+    f = counts / (S * 1.0)
+    pbar = probs.mean(1)
+    aux = moe.n_experts * jnp.mean(jnp.sum(f * pbar, axis=-1))
+    return y, aux.astype(jnp.float32)
+
+
+def apply_moe_layer(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    g = moe.group_size
+    n_tokens = B * S
+    n_groups = max(1, n_tokens // g)
+    if n_tokens % g:
+        # pad token count to a multiple of the group size
+        pad = n_groups * g + (g if n_tokens > n_groups * g else 0) - n_tokens
+        xt = jnp.pad(x.reshape(n_tokens, D), ((0, pad), (0, 0)))
+        n_groups = xt.shape[0] // g
+    else:
+        xt = x.reshape(n_tokens, D)
+        pad = 0
+    xg = xt.reshape(n_groups, g, D)
+
+    if moe.impl == "scatter":
+        routed, aux = _apply_moe_scatter(p, xg, cfg)
+    else:
+        router_dtype = jnp.dtype(moe.router_dtype)
+        logits = (xg.astype(router_dtype) @ p["router"].astype(router_dtype))  # (G,S,E)
+        top_w, top_idx, probs = _route(logits, moe)
+        dispatch, combine = _dispatch_tensors(top_w, top_idx, moe, g)
+
+        # aux load-balance loss (Switch): E * mean_e[f_e * p_e]
+        f = dispatch.sum((1, 3)) / g                       # (G, E) fraction dispatched
+        pbar = probs.mean(1)                               # (G, E)
+        aux = moe.n_experts * jnp.mean(jnp.sum(f * pbar, axis=-1))
+
+        dtype = xg.dtype
+        expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dtype), xg)   # (E,G,C,D)
+        we = p["experts"]
+        h_gate = jnp.einsum("egcd,edf->egcf", expert_in, we["w_gate"].astype(dtype))
+        h_up = jnp.einsum("egcd,edf->egcf", expert_in, we["w_up"].astype(dtype))
+        act = jax.nn.silu(h_gate) if cfg.activation == "swiglu" else jax.nn.gelu(h_gate, approximate=True)
+        expert_out = jnp.einsum("egcf,efd->egcd", act * h_up, we["w_down"].astype(dtype))
+        routed = jnp.einsum("gsec,egcd->gsd", combine.astype(dtype), expert_out)  # (G,S,D)
+
+    out = routed.reshape(-1, D)
+    if pad:
+        out = out[:n_tokens]
+    out = out.reshape(B, S, D)
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    return out, aux.astype(jnp.float32)

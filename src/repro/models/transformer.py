@@ -1,0 +1,212 @@
+"""Stack assembly: segments of repeated layer groups, scanned with lax.scan.
+
+A *segment* is (block_types, n_repeats): dense models are one segment
+(("attention",), L); RecurrentGemma's 1:2 hybrid is
+(("rglru","rglru","local_attn"), L//3) plus a remainder segment.  Per-segment
+parameters are stacked along a leading repeat axis so the whole stack lowers
+as one scanned HLO body — compile time and HLO size stay O(period), not O(L).
+
+Block kinds:
+  attention   — GQA/MQA (+optional SWA) + gated MLP (or MoE for moe family)
+  local_attn  — sliding-window attention + MLP (hybrid)
+  rglru       — RG-LRU temporal block + MLP (hybrid)
+  rwkv6       — RWKV-6 time-mix + channel-mix
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import kvcache as kv
+from . import layers as L
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv6_mod
+
+Params = Dict[str, Any]
+
+
+# -- static structure -------------------------------------------------------------
+
+def segment_specs(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    pattern = cfg.pattern_for_layers()
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = len(pattern) // period
+    segs: List[Tuple[Tuple[str, ...], int]] = []
+    if n_full:
+        segs.append((tuple(pattern[:period]), n_full))
+    rem = len(pattern) - n_full * period
+    if rem:
+        segs.append((tuple(pattern[n_full * period:]), 1))
+    return segs
+
+
+# -- init ----------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, block_type: str) -> Params:
+    ks = jax.random.split(key, 4)
+    if block_type == "rwkv6":
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg),
+            "tm": rwkv6_mod.init_time_mix(ks[0], cfg),
+            "norm2": L.init_norm(cfg.d_model, cfg),
+            "cm": rwkv6_mod.init_channel_mix(ks[1], cfg),
+        }
+    if block_type == "rglru":
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg),
+            "rglru": rglru_mod.init_rglru_block(ks[0], cfg),
+            "norm2": L.init_norm(cfg.d_model, cfg),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    # attention / local_attn
+    p: Params = {
+        "norm1": L.init_norm(cfg.d_model, cfg),
+        "attn": L.init_attention(ks[0], cfg),
+        "norm2": L.init_norm(cfg.d_model, cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe_layer(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_stack(key, cfg: ModelConfig) -> List[Params]:
+    """Per-segment stacked params: list aligned with segment_specs(cfg)."""
+    segs = segment_specs(cfg)
+    out: List[Params] = []
+    for si, (types, n) in enumerate(segs):
+        seg_blocks = []
+        for bi, btype in enumerate(types):
+            per_repeat = [
+                _init_block(jax.random.fold_in(key, si * 10_000 + bi * 100 + r), cfg, btype)
+                for r in range(n)
+            ]
+            seg_blocks.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_repeat))
+        out.append({"blocks": seg_blocks})
+    return out
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> List[Any]:
+    """Decode caches, segment-aligned, stacked along the repeat axis."""
+    segs = segment_specs(cfg)
+    caches = []
+    for types, n in segs:
+        seg = []
+        for btype in types:
+            one = kv.init_block_state(cfg, _state_kind(btype), batch, max_len)
+            seg.append(jax.tree_util.tree_map(lambda x: jnp.stack([x] * n), one))
+        caches.append(seg)
+    return caches
+
+
+def _state_kind(btype: str) -> str:
+    return btype
+
+
+# -- forward ---------------------------------------------------------------------------
+
+def _apply_block(
+    bp: Params, cfg: ModelConfig, btype: str, x: jax.Array,
+    positions: jax.Array, state: Optional[Any], mode: str,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x_out, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if btype == "rwkv6":
+        h, tm_state = rwkv6_mod.apply_time_mix(
+            bp["tm"], L.apply_norm(bp["norm1"], x, cfg), cfg,
+            state["tm"] if state else None)
+        x = x + h
+        h, cm_state = rwkv6_mod.apply_channel_mix(
+            bp["cm"], L.apply_norm(bp["norm2"], x, cfg), cfg,
+            state["cm"] if state else None)
+        x = x + h
+        return x, {"tm": tm_state, "cm": cm_state}, aux
+
+    if btype == "rglru":
+        h, new_state = rglru_mod.apply_rglru_block(
+            bp["rglru"], L.apply_norm(bp["norm1"], x, cfg), cfg, state)
+        x = x + h
+        x = x + L.apply_mlp(bp["mlp"], L.apply_norm(bp["norm2"], x, cfg), cfg)
+        return x, new_state, aux
+
+    # attention / local_attn
+    window = cfg.sliding_window if (btype == "local_attn" or cfg.sliding_window) else None
+    causal = not cfg.encoder_only
+    xn = L.apply_norm(bp["norm1"], x, cfg)
+    if state is None:  # train: plain self-attention
+        h, _ = L.attention(bp["attn"], xn, cfg, positions, causal=causal, window=window)
+        new_state = None
+    elif mode == "prefill":
+        # self-attention over the prompt + write (the tail of) k/v to the cache
+        h, (k_new, v_new) = L.attention(bp["attn"], xn, cfg, positions,
+                                        causal=causal, window=window)
+        new_state = kv.update_attn_cache(state, k_new, v_new, positions)
+    else:  # decode: write this step's k/v, then attend against the cache
+        q, k_new, v_new = L.project_qkv(bp["attn"], xn, cfg, positions)
+        new_state = kv.update_attn_cache(state, k_new, v_new, positions)
+        (k_all, v_all), kpos = kv.attn_cache_views(new_state, x.shape[0])
+        out = L.attend(q, k_all, v_all, positions, kpos, cfg,
+                       causal=causal, window=window)
+        B, S_, H, hd = out.shape
+        h = out.reshape(B, S_, H * hd) @ bp["attn"]["wo"]
+    x = x + h
+    xn2 = L.apply_norm(bp["norm2"], x, cfg)
+    if cfg.family == "moe":
+        h2, aux = moe_mod.apply_moe_layer(bp["moe"], xn2, cfg)
+    else:
+        h2 = L.apply_mlp(bp["mlp"], xn2, cfg)
+    x = x + h2
+    return x, new_state, aux
+
+
+def apply_stack(
+    stack: List[Params], cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    caches: Optional[List[Any]] = None, mode: str = "train",
+) -> Tuple[jax.Array, Optional[List[Any]], jax.Array]:
+    """Run all segments. mode: train | prefill | decode.
+
+    train:   caches must be None; returns (x, None, aux)
+    prefill: caches are fresh; returns (x, filled caches, aux)
+    decode:  x is (B, 1, D); caches updated in ring fashion
+    """
+    segs = segment_specs(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[List[Any]] = [] if caches is not None else None
+
+    for si, (types, n) in enumerate(segs):
+        seg_params = stack[si]["blocks"]
+        seg_caches = caches[si] if caches is not None else [None] * len(types)
+
+        def body(carry, xs):
+            from ..dist.sharding import constrain
+            xc, aux_c = carry
+            blocks = xs[0]
+            block_states = xs[1]
+            out_states = []
+            for bi, btype in enumerate(types):
+                st = block_states[bi] if caches is not None else None
+                xc, new_st, aux_b = _apply_block(blocks[bi], cfg, btype, xc,
+                                                 positions, st, mode)
+                xc = constrain(xc)  # pin batch sharding at every block boundary
+                aux_c = aux_c + aux_b
+                out_states.append(new_st if caches is not None else jnp.zeros(()))
+            return (xc, aux_c), tuple(out_states)
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+
+        (x, aux_total), seg_states_out = jax.lax.scan(
+            body_fn, (x, aux_total),
+            (seg_params, tuple(seg_caches) if caches is not None
+             else tuple(jnp.zeros((n,)) for _ in types)),
+        )
+        if new_caches is not None:
+            new_caches.append(list(seg_states_out))
+
+    return x, new_caches, aux_total

@@ -1,0 +1,53 @@
+"""Serving steps: batched prefill and single-token decode, plus a simple
+batched greedy/temperature sampler loop for the serving example.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, decode_step, prefill
+
+__all__ = ["make_prefill_step", "make_decode_step", "sample_tokens"]
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, caches, tokens, pos):
+        return decode_step(params, caches, tokens, pos, cfg)
+    return step
+
+
+def sample_tokens(logits: jax.Array, key, temperature: float = 0.0) -> jax.Array:
+    """Greedy (temperature 0) or categorical sampling. logits (B, V) -> (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params, cfg: ModelConfig, prompt_tokens: jax.Array, n_new: int,
+    temperature: float = 0.0, seed: int = 0, max_len: Optional[int] = None,
+) -> jax.Array:
+    """End-to-end batched generation (prefill + decode loop). Returns (B, n_new)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + n_new)
+    logits, caches = prefill(params, {"tokens": prompt_tokens}, cfg, max_len)
+    key = jax.random.key(seed)
+    tok = sample_tokens(logits, key, temperature)
+
+    decode = jax.jit(lambda c, t, p: decode_step(params, c, t, p, cfg))
+    out = [tok]
+    for i in range(n_new - 1):
+        key = jax.random.fold_in(key, i)
+        logits, caches = decode(caches, tok, jnp.asarray(S + i, jnp.int32))
+        tok = sample_tokens(logits, key, temperature)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

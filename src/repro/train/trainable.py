@@ -1,0 +1,131 @@
+"""ModelTrainable — the bridge between the model zoo and the Tune core.
+
+One Tune *trial* = one ModelTrainable: a jit-compiled train step over a model
+config with trial hyperparameters (lr, warmup, weight decay, optimizer choice,
+microbatch, ...) pulled from ``config``.  Implements the full narrow-waist
+contract: step / save / restore / reset_config — so every scheduler
+(HyperBand pause/resume, PBT clone+mutate) works on real model training.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.api import Trainable
+from ..data.pipeline import DataConfig, SyntheticLMDataset
+from ..models import ModelConfig, param_count
+from .optimizer import adamw, linear_warmup_cosine, sgd
+from .train_step import TrainState, make_train_state, make_train_step
+
+__all__ = ["ModelTrainable", "make_model_trainable"]
+
+
+def _build_optimizer(hp: Dict[str, Any], total_steps: int):
+    name = hp.get("optimizer", "adamw")
+    lr = float(hp.get("lr", 3e-4))
+    schedule = linear_warmup_cosine(lr, int(hp.get("warmup", 10)), total_steps)
+    if name == "adamw":
+        return adamw(schedule,
+                     b1=float(hp.get("b1", 0.9)),
+                     b2=float(hp.get("b2", 0.95)),
+                     weight_decay=float(hp.get("weight_decay", 0.1)),
+                     grad_clip=hp.get("grad_clip", 1.0))
+    if name == "sgd":
+        return sgd(schedule, momentum=float(hp.get("momentum", 0.9)),
+                   weight_decay=float(hp.get("weight_decay", 0.0)),
+                   grad_clip=hp.get("grad_clip", None))
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+class ModelTrainable(Trainable):
+    """config keys: model_cfg (ModelConfig), lr/warmup/optimizer/... (hypers),
+    batch/seq_len/steps_per_iter/total_steps/data_seed (workload)."""
+
+    def setup(self, config: Dict[str, Any]) -> None:
+        self.model_cfg: ModelConfig = config["model_cfg"]
+        self.batch = int(config.get("batch", 8))
+        self.seq_len = int(config.get("seq_len", 128))
+        self.steps_per_iter = int(config.get("steps_per_iter", 5))
+        self.total_steps = int(config.get("total_steps", 1000))
+        self._data = SyntheticLMDataset(DataConfig(
+            global_batch=self.batch, seq_len=self.seq_len,
+            vocab_size=self.model_cfg.vocab_size,
+            seed=int(config.get("data_seed", 0))))
+        self._global_step = 0
+        self._build(config)
+
+    def _build(self, hp: Dict[str, Any]) -> None:
+        self._opt = _build_optimizer(hp, self.total_steps)
+        self._step_fn = jax.jit(make_train_step(
+            self.model_cfg, self._opt,
+            microbatch=int(hp.get("microbatch", 0))))
+        seed = int(hp.get("init_seed", 0))
+        self.state = make_train_state(jax.random.key(seed), self.model_cfg, self._opt)
+
+    # -- narrow-waist contract ---------------------------------------------------
+    def step(self) -> Dict[str, Any]:
+        t0 = time.time()
+        loss = acc = 0.0
+        for _ in range(self.steps_per_iter):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self._data.batch_at(self._global_step).items()}
+            self.state, metrics = self._step_fn(self.state, batch)
+            self._global_step += 1
+        loss = float(metrics["loss"])
+        return {
+            "loss": loss,
+            "accuracy": float(metrics["accuracy"]),
+            "grad_norm": float(metrics["grad_norm"]),
+            "step": self._global_step,
+            "steps_per_s": self.steps_per_iter / max(time.time() - t0, 1e-9),
+        }
+
+    def save(self) -> Any:
+        return {
+            "state": jax.device_get(self.state._asdict()),
+            "global_step": self._global_step,
+        }
+
+    def restore(self, snapshot: Any) -> None:
+        st = snapshot["state"]
+        as_jnp = jax.tree_util.tree_map(jnp.asarray, st)
+        state = TrainState(**as_jnp)
+        # A PBT mutation may have switched optimizer family: if the donor's
+        # opt_state tree doesn't match this trainable's optimizer, re-init it
+        # (params are what cloning is about; moments restart harmlessly).
+        expect = jax.eval_shape(self._opt.init, state.params)
+        if (jax.tree_util.tree_structure(expect)
+                != jax.tree_util.tree_structure(state.opt_state)):
+            state = TrainState(params=state.params,
+                               opt_state=self._opt.init(state.params),
+                               step=state.step)
+        self.state = state
+        self._global_step = int(snapshot["global_step"])
+
+    def reset_config(self, new_config: Dict[str, Any]) -> bool:
+        """PBT mutation: rebuild optimizer/step under new hypers, keep params."""
+        self.config = dict(new_config)
+        params = self.state.params
+        step = self.state.step
+        self._build(new_config)
+        # keep model params; fresh optimizer state under the mutated hypers
+        self.state = TrainState(params=params,
+                                opt_state=self._opt.init(params), step=step)
+        return True
+
+
+def make_model_trainable(model_cfg: ModelConfig, **workload) -> type:
+    """Bind a model config (and workload sizes) into a Trainable subclass."""
+    defaults = dict(workload)
+
+    class Bound(ModelTrainable):
+        def setup(self, config: Dict[str, Any]) -> None:
+            merged = {**defaults, "model_cfg": model_cfg, **config}
+            super().setup(merged)
+
+    Bound.__name__ = f"ModelTrainable[{model_cfg.arch_id}]"
+    return Bound

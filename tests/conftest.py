@@ -1,0 +1,19 @@
+import os
+
+# Tests see the real single-CPU device world (the 512-device override belongs
+# ONLY to launch/dryrun.py). Keep allocations small and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.key(0)

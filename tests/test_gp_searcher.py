@@ -1,0 +1,63 @@
+"""GP-EI searcher: sample efficiency on smooth objectives."""
+import numpy as np
+import pytest
+
+from repro.core.search.gp import GPSearcher, _GP
+from repro.core.search.basic import RandomSearcher
+from repro.core.search.space import choice, loguniform, uniform
+
+
+def run_searcher(s, objective, n):
+    best = np.inf
+    for i in range(n):
+        cfg = s.suggest(f"t{i}")
+        if cfg is None:
+            break
+        loss = objective(cfg)
+        s.observe(f"t{i}", cfg, loss, final=True)
+        best = min(best, loss)
+    return best
+
+
+class TestGP:
+    def test_gp_regression_interpolates(self):
+        X = np.asarray([[0.0], [0.5], [1.0]])
+        y = np.asarray([1.0, 0.0, 1.0])
+        gp = _GP(X, y, length_scale=0.3)
+        mean, std = gp.predict(np.asarray([[0.5], [0.0]]))
+        assert abs(mean[0] - 0.0) < 0.05 and abs(mean[1] - 1.0) < 0.05
+        mean_mid, std_mid = gp.predict(np.asarray([[0.25]]))
+        assert std_mid[0] > std[0]  # more uncertain away from data
+
+    def test_beats_random_on_smooth_objective(self):
+        space = {"x": uniform(0.0, 1.0), "lr": loguniform(1e-4, 1e0)}
+
+        def obj(cfg):
+            return (cfg["x"] - 0.3) ** 2 + (np.log10(cfg["lr"]) + 2) ** 2 * 0.1
+
+        gp_best, rnd_best = [], []
+        for seed in range(3):
+            gp = GPSearcher(space, n_startup_trials=8, seed=seed)
+            rnd = RandomSearcher(space, seed=seed)
+            gp_best.append(run_searcher(gp, obj, 40))
+            rnd_best.append(run_searcher(rnd, obj, 40))
+        assert np.mean(gp_best) < np.mean(rnd_best) * 0.5
+        assert np.mean(gp_best) < 0.01
+
+    def test_handles_mixed_space(self):
+        space = {"x": uniform(0, 1), "c": choice(["a", "b"])}
+        gp = GPSearcher(space, n_startup_trials=3, seed=0)
+        for i in range(10):
+            cfg = gp.suggest(f"t{i}")
+            assert cfg["c"] in ("a", "b") and 0 <= cfg["x"] <= 1
+            gp.observe(f"t{i}", cfg, cfg["x"], final=True)
+
+    def test_requires_continuous_dim(self):
+        with pytest.raises(ValueError):
+            GPSearcher({"c": choice(["a", "b"])})
+
+    def test_max_trials(self):
+        gp = GPSearcher({"x": uniform(0, 1)}, max_trials=2)
+        assert gp.suggest("a") is not None
+        assert gp.suggest("b") is not None
+        assert gp.suggest("c") is None

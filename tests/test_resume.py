@@ -1,0 +1,79 @@
+"""Fault tolerance: experiment interruption + resume from durable checkpoints."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (FIFOScheduler, Trainable, TrialStatus, run_experiments)
+from repro.core.experiment import load_experiment_state
+
+
+class Slow(Trainable):
+    def setup(self, config):
+        self.x = 1.0
+        self.lr = config["lr"]
+
+    def step(self):
+        self.x *= 0.9
+        return {"loss": self.x + self.lr}
+
+    def save(self):
+        return {"x": self.x}
+
+    def restore(self, s):
+        self.x = s["x"]
+
+
+def test_interrupt_and_resume(tmp_path):
+    log_dir = str(tmp_path / "exp")
+
+    # run interrupted after a few events (max_steps caps the event loop)
+    run_experiments(Slow, {"lr": 0.1}, num_samples=3,
+                    scheduler=FIFOScheduler(metric="loss", mode="min"),
+                    stop={"training_iteration": 10}, total_devices=1,
+                    checkpoint_freq=1, log_dir=log_dir, max_steps=12)
+    trials = load_experiment_state(log_dir)
+    assert trials, "state snapshot missing"
+    unfinished = [t for t in trials if not t.status.is_finished()]
+    finished = [t for t in trials if t.status.is_finished()]
+    assert finished, "interruption should land after >=1 completed trial"
+
+    # resume: all trials run to completion, finished ones keep their history
+    an = run_experiments(Slow, None, resume=True,
+                         scheduler=FIFOScheduler(metric="loss", mode="min"),
+                         stop={"training_iteration": 10}, total_devices=1,
+                         checkpoint_freq=1, log_dir=log_dir)
+    assert len(an.trials) == 3
+    assert all(t.status == TrialStatus.TERMINATED for t in an.trials)
+    assert all(t.training_iteration == 10 for t in an.trials)
+
+
+def test_resume_restores_from_disk_checkpoint(tmp_path):
+    log_dir = str(tmp_path / "exp2")
+    run_experiments(Slow, {"lr": 0.0}, num_samples=2,
+                    scheduler=FIFOScheduler(metric="loss", mode="min"),
+                    stop={"training_iteration": 8}, total_devices=2,
+                    checkpoint_freq=2, log_dir=log_dir, max_steps=7)
+    trials = load_experiment_state(log_dir)
+    paused = [t for t in trials if t.status == TrialStatus.PAUSED]
+    if paused:  # a durable checkpoint existed mid-flight
+        t = paused[0]
+        assert t.checkpoint.path and os.path.exists(t.checkpoint.path)
+    an = run_experiments(Slow, None, resume=True,
+                         scheduler=FIFOScheduler(metric="loss", mode="min"),
+                         stop={"training_iteration": 8}, total_devices=2,
+                         checkpoint_freq=2, log_dir=log_dir)
+    # loss continuity: final loss equals an uninterrupted 8-step run's
+    for t in an.trials:
+        np.testing.assert_allclose(t.last_result.value("loss"), 0.9 ** 8,
+                                   rtol=1e-6)
+
+
+def test_resume_requires_log_dir():
+    with pytest.raises(ValueError):
+        run_experiments(Slow, {"lr": 0.1}, resume=True,
+                        stop={"training_iteration": 2})
+
+
+def test_fresh_dir_resume_is_empty(tmp_path):
+    assert load_experiment_state(str(tmp_path)) == []

@@ -1,0 +1,136 @@
+"""Sharding rules: head-aware attention specs, divisibility fallbacks, batch
+and cache specs.  Runs on a 1x1 CPU mesh (specs are mesh-shape-aware, so the
+interesting logic is exercised with virtual sizes via a (1,1) mesh plus direct
+rule checks against a fake mesh shape)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import batch_specs, param_specs, spec_for
+from repro.launch.mesh import make_mesh
+from repro.models import ModelConfig, init_params
+
+
+def fake_key(name):
+    class K:
+        def __init__(self, key):
+            self.key = key
+    return K(name)
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class TestSpecRules:
+    def test_mlp_weight_sharded_when_divisible(self, mesh11):
+        # on a 1x1 mesh every axis size is 1 -> everything divides
+        spec = spec_for([fake_key("stack"), fake_key("blocks"),
+                         fake_key("mlp"), fake_key("w_gate")],
+                        (4, 64, 128), mesh11)
+        assert spec == P(None, ("data",), "model")
+
+    def test_norm_replicated(self, mesh11):
+        spec = spec_for([fake_key("norm1"), fake_key("scale")], (64,), mesh11)
+        assert spec == P(None)
+
+    def test_expert_weights_expert_parallel(self, mesh11):
+        spec = spec_for([fake_key("stack"), fake_key("moe"), fake_key("experts"),
+                         fake_key("w_gate")], (2, 8, 64, 32), mesh11)
+        assert spec == P(None, "model", ("data",), None)
+
+    def test_head_aware_attention_replicates_unsplittable_kv(self):
+        """On a model=16 axis, kv=3 heads must NOT shard; q=9 must not either."""
+        cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=576,
+                          n_heads=9, n_kv_heads=3, d_ff=1536, vocab_size=1024)
+        # fake a 16-wide model axis via a mesh over 1 device is impossible;
+        # check the rule function's decision directly with a mock mesh
+        class MockMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        from repro.dist.sharding import _head_aware_rules
+        rules = _head_aware_rules("wk", ["stack", "attn", "wk"], cfg, MockMesh())
+        assert rules == [("fsdp", None)]
+        rules_q = _head_aware_rules("wq", ["stack", "attn", "wq"], cfg, MockMesh())
+        assert rules_q == [("fsdp", None)]
+
+    def test_head_aware_allows_divisible_heads(self):
+        cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=8192,
+                          n_heads=64, n_kv_heads=8, d_ff=1024, vocab_size=1024)
+        class MockMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        from repro.dist.sharding import _head_aware_rules
+        assert _head_aware_rules("wq", [], cfg, MockMesh()) == [("fsdp", "tp")]
+        # kv=8 doesn't divide 16 -> replicate kv projections (standard MQA)
+        assert _head_aware_rules("wk", [], cfg, MockMesh()) == [("fsdp", None)]
+
+    def test_divisibility_drop_fallback(self):
+        """504-way vocab can't shard over 16: the spec drops that axis."""
+        class MockMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        spec = spec_for([fake_key("embed"), fake_key("tok")], (504, 1280), MockMesh())
+        # first template (tp, fsdp) fails on 504; falls through to one that fits
+        assert spec[0] is None or spec[0] == ("data",)
+
+    def test_full_param_tree_specs(self, mesh11):
+        cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                          n_heads=2, n_kv_heads=2, d_ff=128,
+                          vocab_size=128).validate()
+        params = init_params(jax.random.key(0), cfg)
+        specs = param_specs(params, mesh11, cfg)
+        flat = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(s, P) for s in flat)
+
+
+class TestBatchSpecs:
+    def test_batch_sharded_when_divisible(self, mesh11):
+        batch = {"tokens": jax.ShapeDtypeStruct((16, 32), np.int32)}
+        specs = batch_specs(batch, mesh11)
+        # data axis size 1 -> no sharding benefit, replicate
+        assert specs["tokens"] == P(None, None)
+
+    def test_odd_batch_replicated(self):
+        class MockMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        batch = {"tokens": jax.ShapeDtypeStruct((1, 32), np.int32)}
+        specs = batch_specs(batch, MockMesh())
+        assert specs["tokens"] == P(None, None)
+
+    def test_divisible_batch_sharded(self):
+        class MockMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        batch = {"tokens": jax.ShapeDtypeStruct((256, 32), np.int32)}
+        specs = batch_specs(batch, MockMesh())
+        assert specs["tokens"] == P(("data",), None)
+
+
+class TestShardedExecution:
+    """End-to-end jit with shardings on a tiny (1,1) mesh — validates the
+    full spec pipeline produces runnable programs."""
+
+    def test_train_step_runs_with_shardings(self, mesh11):
+        import jax.numpy as jnp
+        from functools import partial
+        from repro.dist.sharding import make_shardings, train_state_specs
+        from repro.train import adamw, make_train_state, make_train_step
+
+        cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                          n_heads=2, n_kv_heads=2, d_ff=128,
+                          vocab_size=64).validate()
+        opt = adamw(1e-3)
+        state = make_train_state(jax.random.key(0), cfg, opt)
+        sh = make_shardings(train_state_specs(state, mesh11, cfg), mesh11)
+        batch = {"tokens": jnp.ones((4, 16), jnp.int32),
+                 "labels": jnp.ones((4, 16), jnp.int32)}
+        bsh = make_shardings(batch_specs(batch, mesh11), mesh11)
+        step = jax.jit(make_train_step(cfg, opt),
+                       in_shardings=(sh, bsh), out_shardings=(sh, None))
+        state2, m = step(state, batch)
+        assert jnp.isfinite(m["total_loss"])
