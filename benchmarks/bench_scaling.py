@@ -17,7 +17,13 @@ from repro.core import (CheckpointManager, FIFOScheduler, ObjectStore,
                         TrialRunner)
 from repro.dist.submesh import SlicePool
 
-from .common import emit, write_csv
+try:
+    from .common import emit, write_csv
+except ImportError:  # direct run: python benchmarks/bench_scaling.py
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, write_csv
 
 
 class TimedTrainable(Trainable):
@@ -92,3 +98,7 @@ def run() -> List[Dict]:
              f"occupancy={row['mean_occupancy']}")
     write_csv("scaling", rows)
     return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ from __future__ import annotations
 import queue
 import threading
 import traceback
+from collections import deque
 from typing import Any, Callable, Dict, Optional
 
 __all__ = ["Trainable", "FunctionHandle", "FunctionTrainable", "wrap_function"]
@@ -110,6 +111,7 @@ class FunctionTrainable(Trainable):
         self._error: Optional[str] = None
         self._thread = threading.Thread(target=self._entry, daemon=True)
         self._started = False
+        self._pending_metrics: deque = deque()
 
     def _entry(self) -> None:
         try:
@@ -122,6 +124,14 @@ class FunctionTrainable(Trainable):
             self.handle._result_q.put(("error", self._error))
 
     def step(self) -> Dict[str, Any]:
+        # A save() may have advanced the function to reach a checkpoint
+        # boundary; the result it reported then is owed to the caller first.
+        if self._pending_metrics:
+            return self._pending_metrics.popleft()
+        return self._advance()
+
+    def _advance(self) -> Dict[str, Any]:
+        """Let the function run to its next report; return those metrics."""
         if self._done:
             raise RuntimeError("function trainable already finished")
         if not self._started:
@@ -138,18 +148,20 @@ class FunctionTrainable(Trainable):
         return dict(payload)
 
     def save(self) -> Any:
-        if self.handle._recorded_checkpoint is not None:
-            return self.handle._recorded_checkpoint
-        # Ask the function to checkpoint at its next report boundary.
-        self.handle._checkpoint_requested = True
-        metrics = self.step()
         if self.handle._recorded_checkpoint is None:
-            raise RuntimeError(
-                "function trainable did not record_checkpoint() when asked; "
-                "call tune.record_checkpoint(state) when tune.should_checkpoint()"
-            )
-        self._pending_metrics = metrics
-        return self.handle._recorded_checkpoint
+            # Ask the function to checkpoint at its next report boundary; the
+            # metrics reported there are queued so the next step() yields them
+            # instead of silently dropping a reported result.
+            self.handle._checkpoint_requested = True
+            self._pending_metrics.append(self._advance())
+            if self.handle._recorded_checkpoint is None:
+                raise RuntimeError(
+                    "function trainable did not record_checkpoint() when asked; "
+                    "call tune.record_checkpoint(state) when tune.should_checkpoint()"
+                )
+        state = self.handle._recorded_checkpoint
+        self.handle._recorded_checkpoint = None  # consume: next save re-asks
+        return state
 
     def restore(self, state: Any) -> None:
         raise NotImplementedError(

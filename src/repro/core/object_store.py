@@ -27,6 +27,7 @@ class ObjectStore:
         self._spill_dir = spill_dir
         self._counter = itertools.count()
         self.n_spilled = 0
+        self.n_evicted = 0
 
     def _estimate_size(self, value: Any) -> int:
         import jax
@@ -43,9 +44,12 @@ class ObjectStore:
     def put(self, value: Any, key: Optional[str] = None) -> str:
         key = key or f"obj_{next(self._counter):08d}"
         size = self._estimate_size(value)
-        self._evict_for(size)
         if key in self._mem:
-            self._used -= self._sizes.get(key, 0)
+            # replacing: credit the old entry back BEFORE capacity accounting,
+            # else a same-key update can spuriously evict (or refuse)
+            self._used -= self._sizes.pop(key, 0)
+            del self._mem[key]
+        self._evict_for(size)
         self._mem[key] = value
         self._sizes[key] = size
         self._used += size
@@ -85,12 +89,21 @@ class ObjectStore:
         return os.path.join(self._spill_dir, f"{key}.pkl")
 
     def _evict_for(self, incoming: int) -> None:
+        if self._used + incoming > self._capacity and self._mem and not self._spill_dir:
+            # Without a spill_dir, LRU eviction would DESTROY objects and turn
+            # later get() calls into KeyErrors.  Refuse: a loud capacity error
+            # beats silently losing a trial checkpoint.
+            raise RuntimeError(
+                f"ObjectStore over capacity ({self._used + incoming} > "
+                f"{self._capacity} bytes) and no spill_dir is configured; "
+                "evicting would destroy stored objects. Configure spill_dir= "
+                "or raise capacity_bytes.")
         while self._mem and self._used + incoming > self._capacity:
-            key, value = self._mem.popitem(last=False)  # LRU
+            key, value = self._mem.popitem(last=False)  # LRU -> disk
             self._used -= self._sizes.pop(key, 0)
             path = self._spill_path(key)
-            if path:
-                os.makedirs(self._spill_dir, exist_ok=True)
-                with open(path, "wb") as f:
-                    pickle.dump(value, f)
-                self.n_spilled += 1
+            os.makedirs(self._spill_dir, exist_ok=True)
+            with open(path, "wb") as f:
+                pickle.dump(value, f)
+            self.n_spilled += 1
+            self.n_evicted += 1

@@ -1,0 +1,23 @@
+"""repro.dist — trial placement and sharding (DESIGN.md §2–§3).
+
+Two layers:
+
+* :mod:`repro.dist.submesh` — the ``SlicePool``: carves the global device list
+  into contiguous per-trial sub-meshes (the cluster-placement analogue of the
+  paper's two-level scheduler).
+* :mod:`repro.dist.sharding` — the rule-based PartitionSpec engine: maps
+  parameter/optimizer/batch/cache pytrees onto a mesh via named rule templates
+  with head-aware and divisibility fallbacks.
+"""
+from . import sharding, submesh
+from .sharding import (activation_policy, batch_specs, cache_specs, constrain,
+                       make_shardings, param_specs, sharding_strategy, spec_for,
+                       train_state_specs)
+from .submesh import MeshSlice, SlicePool
+
+__all__ = [
+    "sharding", "submesh", "SlicePool", "MeshSlice",
+    "spec_for", "param_specs", "train_state_specs", "batch_specs",
+    "cache_specs", "make_shardings", "constrain", "sharding_strategy",
+    "activation_policy",
+]

@@ -1,0 +1,162 @@
+"""SlicePool — contiguous sub-mesh allocation for trials (DESIGN.md §2).
+
+The runner treats TPU devices like the paper treats cluster nodes: a trial
+asks for ``Resources(devices=k)`` and the executor hands it a ``MeshSlice``
+of ``k`` contiguous devices from the pool.  Contiguity matters on real
+hardware (ICI locality on a torus); here it is first-fit over a linearized
+device order with coalescing on release, i.e. the classic free-list
+allocator, which keeps fragmentation bounded for the power-of-two slice
+sizes trials actually request.
+
+Two modes:
+
+* device mode — ``SlicePool(devices=[...])`` allocates real ``jax.Device``
+  objects; ``MeshSlice.make_mesh`` builds a ``jax.sharding.Mesh`` over them.
+* virtual mode — ``SlicePool(n_virtual=256)`` tracks capacity only (CPU
+  testing / benchmarks); ``make_mesh`` tiles the host's devices to the
+  requested size so mesh-shape logic stays exercised on one CPU.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple
+
+__all__ = ["MeshSlice", "SlicePool"]
+
+
+def balanced_shape(size: int, n_axes: int) -> Tuple[int, ...]:
+    """Factor ``size`` into ``n_axes`` dims, as square as possible, largest
+    first — e.g. 8 over 2 axes -> (4, 2).  Used when a trial mesh has more
+    axis names than the slice has natural dimensions."""
+    if n_axes <= 0:
+        raise ValueError("n_axes must be >= 1")
+    dims = [1] * n_axes
+    rem = size
+    # peel prime factors largest-first onto the currently-smallest axis
+    factors: List[int] = []
+    d = 2
+    while d * d <= rem:
+        while rem % d == 0:
+            factors.append(d)
+            rem //= d
+        d += 1
+    if rem > 1:
+        factors.append(rem)
+    for f in sorted(factors, reverse=True):
+        dims[dims.index(min(dims))] *= f
+    return tuple(sorted(dims, reverse=True))
+
+
+@dataclass(frozen=True)
+class MeshSlice:
+    """A contiguous range of the pool's device order.
+
+    ``devices`` is None in virtual mode.  Slices are value objects — the pool
+    identifies them by ``(start, size)`` on release.
+    """
+    start: int
+    size: int
+    devices: Optional[Tuple[Any, ...]] = None
+
+    def make_mesh(self, axis_names: Sequence[str],
+                  shape: Optional[Tuple[int, ...]] = None):
+        """A real ``jax.sharding.Mesh`` over this slice's devices.
+
+        ``shape`` defaults to a balanced factorization of ``size`` over
+        ``axis_names`` (one axis -> ``(size,)``).  In virtual mode the host's
+        devices are tiled to ``size`` so the mesh is still constructible on a
+        single-CPU test machine.
+        """
+        import jax
+        import numpy as np
+
+        axis_names = tuple(axis_names)
+        if shape is None:
+            shape = balanced_shape(self.size, len(axis_names))
+        if math.prod(shape) != self.size:
+            raise ValueError(f"mesh shape {shape} does not cover slice of "
+                             f"size {self.size}")
+        if self.devices is not None:
+            devs = list(self.devices)
+        else:
+            host = jax.devices()
+            devs = (host * ((self.size + len(host) - 1) // len(host)))[: self.size]
+        return jax.sharding.Mesh(np.asarray(devs, dtype=object).reshape(shape),
+                                 axis_names)
+
+
+class SlicePool:
+    """First-fit contiguous allocator over a linear device order.
+
+    Free ranges are kept sorted by start offset; ``release`` merges with
+    adjacent free ranges so a fully-drained pool always coalesces back to one
+    range (``can_fit(n_total)`` is the invariant the tests check).
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None,
+                 n_virtual: Optional[int] = None):
+        if (devices is None) == (n_virtual is None):
+            raise ValueError("pass exactly one of devices= or n_virtual=")
+        self._devices = tuple(devices) if devices is not None else None
+        self.n_total = len(self._devices) if self._devices is not None else int(n_virtual)
+        if self.n_total <= 0:
+            raise ValueError("pool must hold at least one device")
+        self._free: List[Tuple[int, int]] = [(0, self.n_total)]  # (start, size)
+        self._held: dict = {}  # start -> size, for double-release detection
+        self.n_acquired_total = 0  # lifetime acquire count (occupancy metrics)
+
+    # -- queries -----------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return sum(size for _, size in self._free)
+
+    def can_fit(self, size: int) -> bool:
+        if size <= 0:
+            raise ValueError(f"slice size must be positive, got {size}")
+        return any(sz >= size for _, sz in self._free)
+
+    @property
+    def fragments(self) -> int:
+        """Number of disjoint free ranges (1 = fully coalesced)."""
+        return len(self._free)
+
+    # -- allocate / release -------------------------------------------------------
+    def acquire(self, size: int) -> MeshSlice:
+        if size <= 0:
+            raise ValueError(f"slice size must be positive, got {size}")
+        for i, (start, sz) in enumerate(self._free):
+            if sz >= size:
+                if sz == size:
+                    del self._free[i]
+                else:
+                    self._free[i] = (start + size, sz - size)
+                self._held[start] = size
+                self.n_acquired_total += 1
+                devs = (self._devices[start:start + size]
+                        if self._devices is not None else None)
+                return MeshSlice(start=start, size=size, devices=devs)
+        raise RuntimeError(
+            f"SlicePool cannot fit a slice of {size} devices "
+            f"(free={self.n_free}/{self.n_total} in {len(self._free)} fragments)")
+
+    def release(self, sl: MeshSlice) -> None:
+        if self._held.get(sl.start) != sl.size:
+            raise ValueError(f"slice [{sl.start}, {sl.start + sl.size}) is not "
+                             "currently held (double release?)")
+        del self._held[sl.start]
+        # insert sorted, then coalesce with neighbours
+        import bisect
+        idx = bisect.bisect_left(self._free, (sl.start, sl.size))
+        self._free.insert(idx, (sl.start, sl.size))
+        merged: List[Tuple[int, int]] = []
+        for start, size in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == start:
+                merged[-1] = (merged[-1][0], merged[-1][1] + size)
+            else:
+                merged.append((start, size))
+        self._free = merged
+
+    def __repr__(self) -> str:
+        return (f"SlicePool(total={self.n_total}, free={self.n_free}, "
+                f"fragments={len(self._free)})")

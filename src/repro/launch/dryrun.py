@@ -153,7 +153,8 @@ def lower_one(
         print(f"[dryrun] {arch} x {shape.name} x {mesh_name} "
               f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
         print(f"  memory_analysis: {ma}")
-        ca = compiled.cost_analysis()
+        from .roofline import normalize_cost_analysis
+        ca = normalize_cost_analysis(compiled.cost_analysis())
         print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
               f"bytes={ca.get('bytes accessed', 0):.3e}")
         print(f"  roofline: compute={report.compute_s*1e3:.2f}ms "

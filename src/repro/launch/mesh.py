@@ -22,14 +22,22 @@ class HW:
     CHIPS_PER_POD = 256
 
 
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    # Auto axis types are the default on old jax and an explicit kwarg on new;
+    # pass them only where supported so both jax 0.4.x and 0.5+ work.
+    try:
+        axis_type = jax.sharding.AxisType.Auto  # jax >= 0.5
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh with Auto axis types (e.g. trial sub-meshes)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)

@@ -32,7 +32,16 @@ import numpy as np
 
 from .mesh import HW
 
-__all__ = ["RooflineReport", "analyze", "hlo_costs", "model_flops"]
+__all__ = ["RooflineReport", "analyze", "hlo_costs", "model_flops",
+           "normalize_cost_analysis"]
+
+
+def normalize_cost_analysis(ca) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on jax>=0.5, a [dict] on
+    0.4.x, and None on some backends; normalize all three to a dict."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return ca or {}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -46,7 +55,10 @@ _COLL_RE = re.compile(
     r"(-start|-done)?\(")
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
-_DOT_ARGS_RE = re.compile(r"dot\(([^,)]+)")
+# first dot operand; commas inside shape brackets / layout braces (older HLO
+# dumps print full operand types, e.g. "dot(f32[64,128]{1,0} %a, ...)") don't
+# terminate the match.
+_DOT_ARGS_RE = re.compile(r"dot\(((?:\[[^\]]*\]|\{[^}]*\}|[^,)\[{])+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)? \([^)]*\)", re.M)
 _WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+), body=%?([\w.\-]+)")
@@ -288,7 +300,7 @@ def analyze(
     compiled, n_params_active: int, n_tokens: int, kind: str,
     hlo_text: Optional[str] = None,
 ) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     text = hlo_text if hlo_text is not None else compiled.as_text()
     costs = hlo_costs(text)

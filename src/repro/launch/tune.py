@@ -100,8 +100,13 @@ def main() -> None:
         cfg_str = {k: (round(v, 5) if isinstance(v, float) else v)
                    for k, v in row["config"].items()
                    if isinstance(v, (int, float, str))}
+        best = "   n/a" if row["best"] is None else f"{row['best']:.4f}"
         print(f"  {row['trial_id']}: {row['status']:10s} iters={row['iterations']:3d} "
-              f"best={row['best']:.4f} {cfg_str}")
+              f"best={best} {cfg_str}")
+    if analysis.best_value() is None:
+        print("[tune] no trial produced a result (check that "
+              "--devices-per-trial fits --total-devices)")
+        return
     print(f"[tune] best config: {json.dumps({k: v for k, v in analysis.best_config().items() if isinstance(v, (int, float, str))})}")
     print(f"[tune] best loss:   {analysis.best_value():.4f}")
     print(f"[tune] total training iterations across trials: {analysis.total_iterations()}")

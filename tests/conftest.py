@@ -9,6 +9,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # pytest-timeout is optional (requirements-dev.txt); register the marker
+    # so collection stays warning-free when the plugin is absent.
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test timeout (pytest-timeout)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

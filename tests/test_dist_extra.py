@@ -1,0 +1,135 @@
+"""Direct coverage for the dist subsystem beyond the seed suite: SlicePool
+fragmentation/coalescing behaviour and decode cache specs (exercised only
+through the dryrun path otherwise)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import cache_specs, sharding_strategy
+from repro.dist.submesh import MeshSlice, SlicePool, balanced_shape
+from repro.models import ModelConfig
+from repro.models import transformer as T
+
+
+class MockMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 4, "model": 2}
+
+
+class TestSlicePoolFragmentation:
+    def test_hole_reuse_exact_fit(self):
+        pool = SlicePool(n_virtual=16)
+        a = pool.acquire(4)
+        b = pool.acquire(4)
+        c = pool.acquire(8)
+        pool.release(b)  # hole [4, 8)
+        assert pool.fragments == 1 and pool.n_free == 4
+        d = pool.acquire(4)
+        assert d.start == b.start  # first-fit lands in the hole
+        for s in (a, c, d):
+            pool.release(s)
+        assert pool.fragments == 1 and pool.can_fit(16)
+
+    def test_fragmented_pool_rejects_contiguous_request(self):
+        """6 free devices split 2+4 cannot host a 6-wide slice."""
+        pool = SlicePool(n_virtual=8)
+        a = pool.acquire(2)
+        b = pool.acquire(2)
+        c = pool.acquire(4)
+        pool.release(a)
+        pool.release(c)
+        assert pool.n_free == 6
+        assert not pool.can_fit(6)
+        assert pool.can_fit(4)
+        with pytest.raises(RuntimeError):
+            pool.acquire(6)
+        pool.release(b)  # middle slice returns -> full coalesce
+        assert pool.fragments == 1
+        assert pool.acquire(8).size == 8
+
+    def test_double_release_rejected(self):
+        pool = SlicePool(n_virtual=4)
+        s = pool.acquire(2)
+        pool.release(s)
+        with pytest.raises(ValueError):
+            pool.release(s)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_random_walk_conserves_capacity(self, seed):
+        """Property-style: any acquire/release interleaving conserves devices
+        and always coalesces back to one range when drained."""
+        rng = np.random.default_rng(seed)
+        pool = SlicePool(n_virtual=64)
+        held = []
+        for _ in range(200):
+            if held and rng.random() < 0.45:
+                held.remove(sl := held[rng.integers(len(held))])
+                pool.release(sl)
+            else:
+                size = int(rng.integers(1, 9))
+                if pool.can_fit(size):
+                    held.append(pool.acquire(size))
+            assert pool.n_free == 64 - sum(h.size for h in held)
+            # free ranges never overlap a held slice
+            for h in held:
+                for start, size in pool._free:
+                    assert h.start + h.size <= start or start + size <= h.start
+        for h in held:
+            pool.release(h)
+        assert pool.n_free == 64 and pool.fragments == 1
+
+    def test_balanced_mesh_shape(self):
+        assert balanced_shape(8, 1) == (8,)
+        assert balanced_shape(8, 2) == (4, 2)
+        assert balanced_shape(16, 2) == (4, 4)
+        assert balanced_shape(12, 2) == (4, 3)
+        assert balanced_shape(1, 3) == (1, 1, 1)
+
+    def test_virtual_slice_builds_mesh(self):
+        pool = SlicePool(n_virtual=8)
+        sl = pool.acquire(4)
+        mesh = sl.make_mesh(("data", "model"))
+        assert mesh.shape["data"] == 2 and mesh.shape["model"] == 2
+        with pytest.raises(ValueError):
+            sl.make_mesh(("data",), shape=(3,))  # doesn't cover the slice
+
+
+TINY = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                   n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=64).validate()
+
+
+class TestCacheSpecs:
+    def test_kv_cache_batch_dim_sharded(self):
+        caches = T.init_caches(TINY, batch=8, max_len=32)
+        specs = cache_specs(caches, MockMesh(), global_batch=8)
+        # k/v leaves: (n_layers, B, cap, K, hd) -> batch dim over ("data",)
+        assert specs[0][0]["k"] == P(None, ("data",), None, None, None)
+        assert specs[0][0]["v"] == P(None, ("data",), None, None, None)
+        # kpos (n_layers, cap) has no batch dim -> fully replicated
+        assert specs[0][0]["kpos"] == P(None, None)
+
+    def test_indivisible_batch_replicates(self):
+        caches = T.init_caches(TINY, batch=2, max_len=16)
+        specs = cache_specs(caches, MockMesh(), global_batch=2)
+        assert specs[0][0]["k"] == P(None, None, None, None, None)
+
+    def test_dp_only_uses_model_axis_too(self):
+        caches = T.init_caches(TINY, batch=8, max_len=16)
+        with sharding_strategy("dp_only"):
+            specs = cache_specs(caches, MockMesh(), global_batch=8)
+        assert specs[0][0]["k"] == P(None, ("data", "model"), None, None, None)
+
+    def test_layer_count_collision_with_batch(self):
+        """n_layers == global_batch must NOT shard the stacked layer axis:
+        the batch dim of a cache leaf is positional (dim 1), not value-matched."""
+        import dataclasses
+        cfg = dataclasses.replace(TINY, n_layers=4).validate()
+        caches = T.init_caches(cfg, batch=4, max_len=16)
+        specs = cache_specs(caches, MockMesh(), global_batch=4)
+        # k: (n_layers=4, B=4, cap, K, hd) -> dim 1 sharded, dim 0 replicated
+        assert specs[0][0]["k"] == P(None, ("data",), None, None, None)
+        # kpos (n_layers=4, cap=16): dim 1 != batch anyway, but the name
+        # guard must hold even if cap collided with the batch size
+        kpos_collide = cache_specs(
+            {"kpos": np.zeros((4, 4), np.int32)}, MockMesh(), global_batch=4)
+        assert kpos_collide["kpos"] == P(None, None)

@@ -5,7 +5,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core import (CSVLogger, ConsoleLogger, ExperimentAnalysis,
                         JSONLLogger, Result, Trial, TrialStatus)

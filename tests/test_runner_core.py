@@ -2,7 +2,7 @@
 checkpoint serialization — the distributed-substrate invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 import jax.numpy as jnp
 

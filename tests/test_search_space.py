@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.search.space import (Categorical, GridSearch, LogUniform,
                                      Normal, QRandInt, RandInt, Uniform,
