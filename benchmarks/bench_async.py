@@ -1,0 +1,130 @@
+"""Async execution benchmark: ConcurrentMeshExecutor vs SerialMeshExecutor.
+
+Each trial's step holds its slice for a fixed ``--sleep`` (simulated device
+work — a jitted step's dispatch-to-completion time, during which the host
+thread is idle in JAX's async runtime).  The serial executor pays
+trials x iters x sleep wall-clock; the concurrent executor overlaps the
+sleeps across disjoint slices, so wall-clock collapses toward iters x sleep
+and result-throughput rises by ~ the live-trial count.
+
+    python benchmarks/bench_async.py --trials 8 --iters 10 --sleep 0.05
+    python benchmarks/bench_async.py --trials 4 --smoke   # CI smoke (CPU)
+
+Writes benchmarks/results/bench_async.csv and prints the speedup; exits
+non-zero if the concurrent path is not >= --min-speedup faster (1.5x by
+default), so CI catches a regression in the overlap itself.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_src = os.path.join(_here, os.pardir, "src")
+if _src not in sys.path:
+    sys.path.insert(0, _src)
+
+from repro.core import (CheckpointManager, ConcurrentMeshExecutor,
+                        FIFOScheduler, ObjectStore, Resources,
+                        SerialMeshExecutor, Trainable, Trial, TrialRunner,
+                        TrialStatus)
+from repro.dist.submesh import SlicePool
+
+try:
+    from .common import write_csv
+except ImportError:
+    sys.path.insert(0, _here)
+    from common import write_csv
+
+
+class SleepTrainable(Trainable):
+    """One step = hold the slice for ``sleep_s`` (simulated device work)."""
+
+    def setup(self, config):
+        self.sleep_s = float(config.get("sleep_s", 0.05))
+        self.x = 1.0
+
+    def step(self):
+        time.sleep(self.sleep_s)
+        self.x *= 0.9
+        return {"loss": self.x}
+
+    def save(self):
+        return {"x": self.x}
+
+    def restore(self, state):
+        self.x = state["x"]
+
+
+def run_sweep(kind: str, n_trials: int, iters: int, sleep_s: float,
+              devices_per_trial: int = 2) -> Dict:
+    total = n_trials * devices_per_trial
+    pool = SlicePool(n_virtual=total)
+    common = dict(checkpoint_manager=CheckpointManager(ObjectStore()),
+                  total_devices=total, slice_pool=pool, checkpoint_freq=0)
+    if kind == "concurrent":
+        executor = ConcurrentMeshExecutor(lambda n: SleepTrainable, **common)
+    else:
+        executor = SerialMeshExecutor(lambda n: SleepTrainable, **common)
+    runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
+                         stopping_criteria={"training_iteration": iters})
+    for _ in range(n_trials):
+        runner.add_trial(Trial({"sleep_s": sleep_s},
+                               resources=Resources(devices=devices_per_trial),
+                               stopping_criteria={"training_iteration": iters}))
+    t0 = time.time()
+    trials = runner.run()
+    wall = time.time() - t0
+    assert all(t.status == TrialStatus.TERMINATED for t in trials), \
+        [t.status for t in trials]
+    n_results = sum(t.training_iteration for t in trials)
+    return {"bench": "async_exec", "executor": kind, "n_trials": n_trials,
+            "iters": iters, "sleep_s": sleep_s, "wall_s": round(wall, 3),
+            "results_per_s": round(n_results / wall, 1)}
+
+
+def run(n_trials: int = 8, iters: int = 10, sleep_s: float = 0.05) -> List[Dict]:
+    """Harness entry (benchmarks.run): returns the result rows."""
+    rows: List[Dict] = []
+    for kind in ("serial", "concurrent"):
+        row = run_sweep(kind, n_trials, iters, sleep_s)
+        print(f"[bench_async] {kind:10s} wall={row['wall_s']:.3f}s "
+              f"throughput={row['results_per_s']:.1f} results/s")
+        rows.append(row)
+    speedup = rows[1]["results_per_s"] / rows[0]["results_per_s"]
+    for row in rows:
+        row["speedup_vs_serial"] = round(speedup, 2) if row["executor"] == "concurrent" else 1.0
+    path = write_csv("bench_async", rows)
+    print(f"[bench_async] concurrent/serial result-throughput: {speedup:.2f}x "
+          f"({n_trials} trials x {iters} iters, {sleep_s}s/step) -> {path}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--sleep", type=float, default=0.05,
+                    help="simulated per-step device time (seconds)")
+    ap.add_argument("--min-speedup", type=float, default=1.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small sweep, short sleeps")
+    args = ap.parse_args()
+    if args.smoke:
+        args.iters = min(args.iters, 5)
+        args.sleep = min(args.sleep, 0.02)
+
+    rows = run(args.trials, args.iters, args.sleep)
+    speedup = rows[1]["speedup_vs_serial"]
+    if speedup < args.min_speedup:
+        print(f"[bench_async] FAIL: speedup {speedup:.2f}x < required "
+              f"{args.min_speedup}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,16 +24,17 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="run a single bench (loc|convergence|overhead|"
-                         "scaling|vmap|kernels|roofline)")
+                         "scaling|async|vmap|kernels|roofline)")
     args = ap.parse_args()
 
-    from . import (bench_convergence, bench_kernels, bench_loc, bench_overhead,
-                   bench_roofline, bench_scaling, bench_vmap)
+    from . import (bench_async, bench_convergence, bench_kernels, bench_loc,
+                   bench_overhead, bench_roofline, bench_scaling, bench_vmap)
     benches = {
         "loc": bench_loc.run,
         "convergence": bench_convergence.run,
         "overhead": bench_overhead.run,
         "scaling": bench_scaling.run,
+        "async": bench_async.run,
         "vmap": bench_vmap.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,

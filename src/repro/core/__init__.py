@@ -12,7 +12,9 @@ from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Log
 from .object_store import ObjectStore
 from .resources import ResourceAccountant, Resources
 from .runner import TrialRunner
+from .events import EventBus, EventType, TrialEvent
 from .executor import SerialMeshExecutor, TrialExecutor
+from .concurrent_executor import ConcurrentMeshExecutor
 from .trial import Checkpoint, Result, Trial, TrialStatus
 from .schedulers.base import SchedulerDecision, TrialScheduler
 from .schedulers.fifo import FIFOScheduler
@@ -33,6 +35,7 @@ __all__ = [
     "load_experiment_state",
     "Trial", "TrialStatus", "Result", "Checkpoint",
     "TrialRunner", "TrialExecutor", "SerialMeshExecutor",
+    "ConcurrentMeshExecutor", "EventBus", "EventType", "TrialEvent",
     "TrialScheduler", "SchedulerDecision",
     "FIFOScheduler", "MedianStoppingRule", "ASHAScheduler",
     "AsyncHyperBandScheduler", "HyperBandScheduler", "PopulationBasedTraining",

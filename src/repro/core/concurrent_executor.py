@@ -1,0 +1,353 @@
+"""ConcurrentMeshExecutor — asynchronous trial execution over mesh slices.
+
+``SerialMeshExecutor`` time-slices RUNNING trainables one at a time on the
+host thread, so trials holding *disjoint* SlicePool sub-meshes still step
+sequentially.  Here each RUNNING trial gets its own worker thread:
+
+- the worker loops ``train()`` → publish RESULT on the shared ``EventBus``,
+  then parks on a resume gate until the runner has applied the scheduler's
+  decision (``resume_trial`` re-opens the gate on CONTINUE);
+- JAX dispatch from concurrent host threads overlaps device work across the
+  disjoint slices — while the runner processes trial A's result, trials
+  B..N have their steps in flight;
+- a heartbeat monitor publishes HEARTBEAT_MISSED when a step exceeds the
+  straggler timeout, so the runner's event loop always makes progress (and
+  can surface stuck trials) even when no result arrives.
+
+Scheduler semantics are preserved exactly: at most one un-consumed result per
+trial is ever in flight, so PAUSE/STOP/PBT-clone decisions apply before the
+trial advances past the result they were made on.  Failure handling is
+checkpoint-based (paper §4.2): a worker that raises publishes ERROR and the
+runner re-queues the trial from its last checkpoint, bounded by
+``max_failures`` (runner.py).
+
+Threading contract (DESIGN.md §4): the runner thread owns trial lifecycle
+(start/pause/stop/restart) and all ResourceAccountant/SlicePool mutation;
+worker threads own their trainable and touch only the bus and the checkpoint
+manager (serialized by ``_ckpt_lock``).  ``ws.lock`` guards the trainable so
+``save_checkpoint`` from the runner thread waits out an in-flight step.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, Optional
+
+from .api import Trainable
+from .checkpoint import CheckpointManager
+from .events import EventBus, EventType, TrialEvent
+from .executor import _SlicedExecutor
+from .trial import Checkpoint, Result, Trial, TrialStatus
+
+__all__ = ["ConcurrentMeshExecutor"]
+
+
+class _WorkerState:
+    """Per-trial worker bookkeeping; one instance per (re)launched thread."""
+
+    def __init__(self, trial: Trial, trainable: Trainable):
+        self.trial = trial
+        self.trainable = trainable
+        self.thread: Optional[threading.Thread] = None
+        self.resume = threading.Event()   # runner CONTINUE gate
+        self.stop = threading.Event()     # runner halt request
+        self.lock = threading.Lock()      # guards the trainable
+        self.in_step = False
+        self.step_started = 0.0
+        self.last_warned = 0.0
+        self.dead = False                 # worker exited after publishing ERROR
+
+
+class ConcurrentMeshExecutor(_SlicedExecutor):
+    def __init__(
+        self,
+        trainable_cls_resolver: Callable[[str], type],
+        checkpoint_manager: CheckpointManager,
+        total_cpu: float = 64.0,
+        total_devices: int = 256,
+        slice_pool: Optional[Any] = None,  # dist.submesh.SlicePool
+        checkpoint_freq: int = 0,
+        heartbeat_timeout: float = 60.0,   # <=0 disables the monitor
+        event_bus: Optional[EventBus] = None,
+        join_timeout: float = 10.0,
+    ):
+        super().__init__(trainable_cls_resolver, checkpoint_manager,
+                         total_cpu, total_devices, slice_pool, checkpoint_freq)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.join_timeout = join_timeout
+        self.bus = event_bus or EventBus()
+        self._workers: Dict[str, _WorkerState] = {}
+        self._ckpt_lock = threading.Lock()  # CheckpointManager/ObjectStore access
+        self._shutdown_evt = threading.Event()
+        self._monitor_thread: Optional[threading.Thread] = None
+        if heartbeat_timeout and heartbeat_timeout > 0:
+            self._monitor_thread = threading.Thread(
+                target=self._monitor, name="repro-heartbeat", daemon=True)
+            self._monitor_thread.start()
+
+    def has_running(self) -> bool:
+        return bool(self._workers)
+
+    # -- worker loop ----------------------------------------------------------------
+    def _run_worker(self, ws: _WorkerState) -> None:
+        trial_id = ws.trial.trial_id
+        while not ws.stop.is_set():
+            with ws.lock:
+                ws.step_started = time.time()
+                ws.in_step = True
+                try:
+                    metrics = ws.trainable.train()
+                except Exception:  # noqa: BLE001 — trial error, not framework error
+                    ws.dead = True
+                    self.bus.publish(TrialEvent(
+                        EventType.ERROR, trial_id, error=traceback.format_exc()))
+                    return
+                finally:
+                    ws.in_step = False
+            if ws.stop.is_set():
+                # Halted mid-step (shutdown, abort, or abandoned after a join
+                # timeout): the runner has moved on — possibly relaunched this
+                # trial — so publishing this result or checkpointing now would
+                # corrupt the live instance's state.  Discard and exit.
+                return
+            done = bool(metrics.pop("done", False))
+            result = Result(
+                trial_id=trial_id,
+                training_iteration=ws.trainable.iteration,
+                metrics=metrics,
+                done=done,
+            )
+            if (
+                self.checkpoint_freq
+                and ws.trainable.iteration % self.checkpoint_freq == 0
+                and not done
+            ):
+                try:
+                    with ws.lock:
+                        ckpt = self._save_locked(ws)
+                    self.bus.publish(TrialEvent(
+                        EventType.CHECKPOINTED, trial_id, checkpoint=ckpt))
+                except NotImplementedError:
+                    pass
+                except Exception:  # noqa: BLE001 — checkpoint failure kills the trial
+                    ws.dead = True
+                    self.bus.publish(TrialEvent(
+                        EventType.ERROR, trial_id, error=traceback.format_exc()))
+                    return
+            self.bus.publish(TrialEvent(EventType.RESULT, trial_id, result=result))
+            if done:
+                return  # the runner will stop_trial on the final result
+            # Park until the runner applies the scheduler decision.  _halt
+            # sets stop before resume, so a halted worker wakes here exactly
+            # once and exits; no polling.
+            ws.resume.wait()
+            ws.resume.clear()
+
+    def _monitor(self) -> None:
+        interval = max(0.05, min(1.0, self.heartbeat_timeout / 4))
+        while not self._shutdown_evt.wait(interval):
+            now = time.time()
+            for ws in list(self._workers.values()):
+                stalled = ws.in_step and now - ws.step_started > self.heartbeat_timeout
+                if stalled and now - ws.last_warned > self.heartbeat_timeout:
+                    ws.last_warned = now
+                    self.bus.publish(TrialEvent(
+                        EventType.HEARTBEAT_MISSED, ws.trial.trial_id,
+                        info={"stalled_s": round(now - ws.step_started, 3)}))
+
+    # -- lifecycle ------------------------------------------------------------------
+    def _spawn(self, trial: Trial, trainable: Trainable) -> None:
+        ws = _WorkerState(trial, trainable)
+        ws.thread = threading.Thread(
+            target=self._run_worker, args=(ws,),
+            name=f"repro-worker-{trial.trial_id}", daemon=True)
+        self._workers[trial.trial_id] = ws
+        trial.set_status(TrialStatus.RUNNING)
+        ws.thread.start()
+
+    def _acquire_and_build(
+        self, trial: Trial, state: Any = None, iteration: int = 0
+    ) -> Optional[Trainable]:
+        """Acquire resources + slice and build the trainable (restoring
+        ``state`` first, so a worker can never step before the restore lands);
+        on any failure roll back the acquisition and mark the trial ERROR."""
+        self.accountant.acquire(trial.resources)
+        if self.slice_pool is not None:
+            self._slices[trial.trial_id] = self.slice_pool.acquire(trial.resources.devices)
+        try:
+            trainable = self._instantiate(trial)
+            if state is not None:
+                trainable.restore(state)
+                trainable.iteration = iteration
+            return trainable
+        except Exception:
+            self._release(trial)
+            trial.error = traceback.format_exc()
+            trial.set_status(TrialStatus.ERROR)
+            return None
+
+    def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
+        if not self.has_resources(trial):
+            return False
+        state, iteration = None, 0
+        if checkpoint is not None:
+            try:
+                with self._ckpt_lock:
+                    state = self.ckpt.restore(checkpoint)
+            except Exception:
+                trial.error = traceback.format_exc()
+                trial.set_status(TrialStatus.ERROR)
+                return False
+            iteration = checkpoint.training_iteration
+        trainable = self._acquire_and_build(trial, state, iteration)
+        if trainable is None:
+            return False
+        self._spawn(trial, trainable)
+        return True
+
+    def _halt(self, ws: _WorkerState) -> bool:
+        """Stop the worker thread and wait for it to exit (runner thread only).
+        Returns False when the join timed out — the worker is still inside a
+        straggling step and must be treated as abandoned."""
+        ws.stop.set()
+        ws.resume.set()
+        if ws.thread is not None and ws.thread.is_alive():
+            ws.thread.join(timeout=self.join_timeout)
+            return not ws.thread.is_alive()
+        return True
+
+    def _reap(self, trial: Trial) -> Optional[_WorkerState]:
+        """Halt + remove the worker, clean up the trainable, release resources.
+
+        An abandoned worker (join timed out mid-step) keeps its resources and
+        slice leaked on purpose: the thread is still dispatching on that
+        sub-mesh, and releasing it would let a new trial step on the same
+        devices concurrently."""
+        ws = self._workers.pop(trial.trial_id, None)
+        if ws is None:
+            return None
+        if not self._halt(ws):
+            return ws
+        try:
+            ws.trainable.cleanup()
+        except Exception:  # noqa: BLE001
+            pass
+        self._release(trial)
+        return ws
+
+    # -- checkpoints ------------------------------------------------------------------
+    def _save_locked(self, ws: _WorkerState) -> Checkpoint:
+        """Caller holds ws.lock (or the thread is joined)."""
+        state = ws.trainable.save()
+        with self._ckpt_lock:
+            ckpt = self.ckpt.save(ws.trial.trial_id, ws.trainable.iteration, state)
+        ws.trial.checkpoint = ckpt
+        return ckpt
+
+    def save_checkpoint(self, trial: Trial) -> Checkpoint:
+        ws = self._workers[trial.trial_id]
+        with ws.lock:
+            return self._save_locked(ws)
+
+    # -- runner-driven transitions -------------------------------------------------
+    def resume_trial(self, trial: Trial) -> None:
+        ws = self._workers.get(trial.trial_id)
+        if ws is not None:
+            ws.resume.set()
+
+    def pause_trial(self, trial: Trial) -> None:
+        ws = self._workers.get(trial.trial_id)
+        if ws is not None:
+            joined = self._halt(ws)
+            if joined and not ws.dead:
+                self._save_locked(ws)  # safe: thread exited, no torn state
+            self._reap(trial)
+        trial.set_status(TrialStatus.PAUSED)
+
+    def stop_trial(self, trial: Trial, error: Optional[str] = None) -> None:
+        self._reap(trial)
+        if error:
+            trial.error = error
+            trial.set_status(TrialStatus.ERROR)
+        else:
+            trial.set_status(TrialStatus.TERMINATED)
+
+    def requeue_trial(self, trial: Trial) -> None:
+        """Tear down a failed instance, keeping the trial restartable from its
+        last checkpoint (the runner's max_failures retry path).  The runner
+        logs the RESTARTED event itself — publishing here too would deliver
+        every retry twice."""
+        self._reap(trial)
+        self._set_requeue_status(trial)
+
+    def restart_trial_with_config(
+        self, trial: Trial, checkpoint: Checkpoint, new_config: Dict[str, Any]
+    ) -> None:
+        """PBT exploit: restore donor state under a mutated config.
+
+        The worker is parked at the resume gate when this is called (the
+        decision was made on its latest result), so halting it is immediate.
+        """
+        trial.config = dict(new_config)
+        with self._ckpt_lock:
+            state = self.ckpt.restore(checkpoint)
+        ws = self._workers.get(trial.trial_id)
+        if ws is not None:
+            joined = self._halt(ws)
+            if joined and not ws.dead and ws.trainable.reset_config(new_config):
+                ws.trainable.restore(state)
+                ws.trainable.iteration = checkpoint.training_iteration
+                del self._workers[trial.trial_id]  # resources stay acquired
+                self._spawn(trial, ws.trainable)
+                return
+            self._reap(trial)
+            trial.set_status(TrialStatus.PAUSED)
+        # Full rebuild with the donor state restored before launch.
+        if not self.has_resources(trial):
+            trial.checkpoint = checkpoint  # re-queue; next launch restores donor
+            trial.set_status(TrialStatus.PAUSED)
+            return
+        trainable = self._acquire_and_build(
+            trial, state, checkpoint.training_iteration)
+        if trainable is not None:
+            self._spawn(trial, trainable)
+
+    # -- event delivery ---------------------------------------------------------------
+    def get_next_event(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
+        """Block until an event arrives or no worker can produce one.
+
+        With live workers this waits (bounded only by their progress — the
+        heartbeat monitor guarantees an eventual event for stuck steps); with
+        none it drains whatever is queued and then returns None.  When the
+        monitor is disabled that guarantee is gone, so the wait is bounded
+        (~60s) instead: the runner's stall detector stays reachable and a
+        hung step surfaces as a stall error rather than a silent hang.
+        """
+        deadline = None if timeout is None else time.time() + timeout
+        if deadline is None and self._monitor_thread is None:
+            deadline = time.time() + max(60.0, self.join_timeout)
+        while True:
+            # _workers is mutated only by this (runner) thread, so the check
+            # can't race; block on the queue in long slices instead of polling.
+            if not self._workers:
+                return self.bus.get()
+            wait = 0.5
+            if deadline is not None:
+                wait = min(wait, deadline - time.time())
+                if wait <= 0:
+                    return None
+            ev = self.bus.get(timeout=wait)
+            if ev is not None:
+                return ev
+
+    def get_trainable(self, trial_id: str) -> Optional[Trainable]:
+        ws = self._workers.get(trial_id)
+        return ws.trainable if ws is not None else None
+
+    def shutdown(self) -> None:
+        self._shutdown_evt.set()
+        for trial_id in list(self._workers):
+            self._reap(self._workers[trial_id].trial)
+        if self._monitor_thread is not None and self._monitor_thread.is_alive():
+            self._monitor_thread.join(timeout=2.0)

@@ -1,0 +1,98 @@
+"""Typed trial events on a thread-safe bus — the async execution substrate.
+
+The paper's runner is event-based (§4.2): schedulers react to intermediate
+results as they arrive, not in lockstep.  With one executor thread that was
+implicit — ``get_next_result()`` polled.  Once trials step concurrently on
+worker threads (concurrent_executor.py), events need an explicit carrier:
+
+- ``TrialEvent`` — a typed record (RESULT / ERROR / CHECKPOINTED /
+  HEARTBEAT_MISSED / RESTARTED) tagged with the trial id and a bus-assigned
+  monotone sequence number.
+- ``EventBus`` — a thread-safe FIFO.  ``publish`` is callable from any worker
+  thread; sequence assignment and enqueue are atomic, so consumers observe
+  events in exactly the order they were sequenced (the ordering contract the
+  runner's bookkeeping and the JSONL event log rely on).
+
+Only RESULT and ERROR drive scheduler decisions; the rest are observability
+events the runner forwards to loggers (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .trial import Checkpoint, Result
+
+__all__ = ["EventType", "TrialEvent", "EventBus"]
+
+
+class EventType(str, enum.Enum):
+    RESULT = "RESULT"                      # an intermediate (or final) Result
+    ERROR = "ERROR"                        # trainable raised; error carries the traceback
+    CHECKPOINTED = "CHECKPOINTED"          # a periodic checkpoint was written
+    HEARTBEAT_MISSED = "HEARTBEAT_MISSED"  # a step exceeded the straggler timeout
+    RESTARTED = "RESTARTED"                # trial re-queued for restart-from-checkpoint
+
+
+@dataclass
+class TrialEvent:
+    type: EventType
+    trial_id: str
+    result: Optional[Result] = None        # RESULT
+    error: Optional[str] = None            # ERROR (formatted traceback)
+    checkpoint: Optional[Checkpoint] = None  # CHECKPOINTED
+    info: Dict[str, Any] = field(default_factory=dict)
+    timestamp: float = field(default_factory=time.time)
+    seq: int = -1                          # assigned by the bus on publish
+
+
+class EventBus:
+    """Thread-safe FIFO of ``TrialEvent``s with atomic sequence numbering.
+
+    Multiple producers (executor worker threads, the heartbeat monitor) and a
+    single consumer (the runner's event loop).  ``publish`` holds one lock
+    across seq assignment *and* enqueue, so ``seq`` order equals delivery
+    order even under concurrent publishers.
+    """
+
+    def __init__(self, maxsize: int = 0):
+        self._q: "queue.Queue[TrialEvent]" = queue.Queue(maxsize=maxsize)
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+        self.n_published = 0
+
+    def publish(self, event: TrialEvent) -> TrialEvent:
+        with self._lock:
+            event.seq = next(self._seq)
+            self._q.put(event)
+            self.n_published += 1
+        return event
+
+    def get(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
+        """Next event, or None after ``timeout`` seconds (None = non-blocking)."""
+        try:
+            if timeout is None:
+                return self._q.get_nowait()
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def drain(self) -> List[TrialEvent]:
+        """All currently queued events, in order, without blocking."""
+        out: List[TrialEvent] = []
+        while True:
+            ev = self.get()
+            if ev is None:
+                return out
+            out.append(ev)
+
+    def __len__(self) -> int:
+        return self._q.qsize()
+
+    def empty(self) -> bool:
+        return self._q.empty()

@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 from .api import Trainable
 from .checkpoint import CheckpointManager
+from .events import EventType, TrialEvent
 from .resources import ResourceAccountant, Resources
 from .trial import Checkpoint, Result, Trial, TrialStatus
 
@@ -35,6 +36,11 @@ class TrialExecutor:
     def stop_trial(self, trial: Trial, error: Optional[str] = None) -> None:
         raise NotImplementedError
 
+    def requeue_trial(self, trial: Trial) -> None:
+        """Tear down a failed trial instance without finishing the trial, so the
+        runner can restart it from its last checkpoint (max_failures retry)."""
+        raise NotImplementedError
+
     def restart_trial_with_config(
         self, trial: Trial, checkpoint: Checkpoint, new_config: Dict[str, Any]
     ) -> None:
@@ -42,6 +48,25 @@ class TrialExecutor:
 
     def get_next_result(self) -> Optional[Tuple[Trial, Any]]:
         raise NotImplementedError
+
+    def get_next_event(self) -> Optional[TrialEvent]:
+        """Next ``TrialEvent`` for the runner's event loop.
+
+        Compat shim for poll-style executors: wraps ``get_next_result()``
+        pairs into typed events.  Push-style executors (concurrent_executor)
+        override this to drain their EventBus instead.
+        """
+        pair = self.get_next_result()
+        if pair is None:
+            return None
+        trial, payload = pair
+        if isinstance(payload, Exception):
+            return TrialEvent(EventType.ERROR, trial.trial_id, error=str(payload))
+        return TrialEvent(EventType.RESULT, trial.trial_id, result=payload)
+
+    def resume_trial(self, trial: Trial) -> None:
+        """CONTINUE decision applied; gated executors let the trial's next
+        step proceed.  Poll-style executors advance implicitly — no-op."""
 
     def has_resources(self, trial: Trial) -> bool:
         raise NotImplementedError
@@ -56,7 +81,12 @@ class TrialExecutor:
         pass
 
 
-class SerialMeshExecutor(TrialExecutor):
+class _SlicedExecutor(TrialExecutor):
+    """Shared capacity/placement accounting for executors that place each
+    trial on a SlicePool sub-mesh (serial and concurrent).  One copy of the
+    acquire/instantiate/release logic keeps their placement behavior from
+    drifting apart."""
+
     def __init__(
         self,
         trainable_cls_resolver: Callable[[str], type],
@@ -71,27 +101,39 @@ class SerialMeshExecutor(TrialExecutor):
         self.accountant = ResourceAccountant(total_cpu, total_devices)
         self.slice_pool = slice_pool
         self.checkpoint_freq = checkpoint_freq
-        self._running: Dict[str, Trainable] = {}
-        self._queue: deque = deque()  # round-robin order of trial_ids
-        self._trials: Dict[str, Trial] = {}
         self._slices: Dict[str, Any] = {}
 
-    # -- capacity -----------------------------------------------------------------
     def has_resources(self, trial: Trial) -> bool:
         if self.slice_pool is not None and not self.slice_pool.can_fit(trial.resources.devices):
             return False
         return self.accountant.has_room(trial.resources)
 
-    def has_running(self) -> bool:
-        return bool(self._running)
-
-    # -- lifecycle ------------------------------------------------------------------
     def _instantiate(self, trial: Trial) -> Trainable:
         cls = self._resolve(trial.trainable_name)
         config = dict(trial.config)
         if self.slice_pool is not None:
             config["_slice"] = self._slices[trial.trial_id]
         return cls(config)
+
+    def _release(self, trial: Trial) -> None:
+        self.accountant.release(trial.resources)
+        if self.slice_pool is not None and trial.trial_id in self._slices:
+            self.slice_pool.release(self._slices.pop(trial.trial_id))
+
+    def _set_requeue_status(self, trial: Trial) -> None:
+        trial.set_status(
+            TrialStatus.PAUSED if trial.checkpoint is not None else TrialStatus.PENDING)
+
+
+class SerialMeshExecutor(_SlicedExecutor):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._running: Dict[str, Trainable] = {}
+        self._queue: deque = deque()  # round-robin order of trial_ids
+        self._trials: Dict[str, Trial] = {}
+
+    def has_running(self) -> bool:
+        return bool(self._running)
 
     def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
         if not self.has_resources(trial):
@@ -115,11 +157,6 @@ class SerialMeshExecutor(TrialExecutor):
         self._queue.append(trial.trial_id)
         trial.set_status(TrialStatus.RUNNING)
         return True
-
-    def _release(self, trial: Trial) -> None:
-        self.accountant.release(trial.resources)
-        if self.slice_pool is not None and trial.trial_id in self._slices:
-            self.slice_pool.release(self._slices.pop(trial.trial_id))
 
     def _teardown(self, trial: Trial) -> None:
         trainable = self._running.pop(trial.trial_id, None)
@@ -155,6 +192,12 @@ class SerialMeshExecutor(TrialExecutor):
         else:
             trial.set_status(TrialStatus.TERMINATED)
 
+    def requeue_trial(self, trial: Trial) -> None:
+        """Tear down a failed instance, keeping the trial restartable from its
+        last checkpoint (the runner's max_failures retry path)."""
+        self._teardown(trial)
+        self._set_requeue_status(trial)
+
     def restart_trial_with_config(self, trial, checkpoint, new_config) -> None:
         """PBT exploit: restore donor state under a mutated config.
 
@@ -173,6 +216,12 @@ class SerialMeshExecutor(TrialExecutor):
                 trial.set_status(TrialStatus.PAUSED)
             started = self.start_trial(trial, checkpoint=None)
             if not started:
+                if trial.status != TrialStatus.ERROR:
+                    # No capacity to rebuild right now: re-queue PAUSED with
+                    # the donor checkpoint attached so the next launch
+                    # restores it — never leave the trial sliceless in limbo.
+                    trial.checkpoint = checkpoint
+                    trial.set_status(TrialStatus.PAUSED)
                 return
             new_trainable = self._running[trial.trial_id]
             new_trainable.restore(state)
@@ -212,6 +261,8 @@ class SerialMeshExecutor(TrialExecutor):
                     self.save_checkpoint(trial)
                 except NotImplementedError:
                     pass
+                except Exception as e:  # noqa: BLE001 — checkpoint failure is a
+                    return trial, e     # trial error (retryable), not framework death
             return trial, result
         return None
 

@@ -19,6 +19,7 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 from .api import Trainable, wrap_function
 from .checkpoint import CheckpointManager
+from .concurrent_executor import ConcurrentMeshExecutor
 from .executor import SerialMeshExecutor, TrialExecutor
 from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Logger
 from .object_store import ObjectStore
@@ -150,12 +151,22 @@ def run_experiments(
     verbose: bool = False,
     seed: int = 0,
     max_steps: int = 10_000_000,
-    executor: Optional[TrialExecutor] = None,
+    executor: Union[None, str, TrialExecutor] = None,
+    max_failures: int = 0,
+    max_experiment_failures: int = 0,
+    heartbeat_timeout: float = 60.0,
     metric: Optional[str] = None,
     mode: Optional[str] = None,
     resume: bool = False,
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
+
+    ``executor`` is a TrialExecutor instance, or ``"serial"``/``"concurrent"``
+    to build one here (``"concurrent"`` steps trials on worker threads with
+    heartbeat/straggler detection — DESIGN.md §4).  ``max_failures`` restarts
+    a crashed trial from its last checkpoint up to that many times before
+    marking it ERROR; ``max_experiment_failures`` aborts the whole experiment
+    once more trials than that have errored.
 
     ``resume=True`` (requires ``log_dir``) restores the trial list of an
     interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
@@ -178,8 +189,9 @@ def run_experiments(
     ckpt_mgr = CheckpointManager(store,
                                  dir=os.path.join(log_dir, "ckpt") if log_dir else None,
                                  durable=log_dir is not None)
-    if executor is None:
-        executor = SerialMeshExecutor(
+    if executor is None or isinstance(executor, str):
+        kind = executor or "serial"
+        common = dict(
             trainable_cls_resolver=_REGISTRY.__getitem__,
             checkpoint_manager=ckpt_mgr,
             total_cpu=total_cpu,
@@ -187,6 +199,15 @@ def run_experiments(
             slice_pool=slice_pool,
             checkpoint_freq=checkpoint_freq,
         )
+        if kind == "serial":
+            executor = SerialMeshExecutor(**common)
+        elif kind == "concurrent":
+            executor = ConcurrentMeshExecutor(
+                heartbeat_timeout=heartbeat_timeout, **common)
+        else:
+            raise ValueError(
+                f"unknown executor {kind!r}; pass 'serial', 'concurrent', or a "
+                f"TrialExecutor instance (VmapExecutor needs a VectorTrainableSpec)")
     loggers: List[Logger] = [ConsoleLogger(verbose=verbose)]
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
@@ -201,6 +222,8 @@ def run_experiments(
         trainable_name=name,
         default_resources=resources_per_trial or Resources(),
         stopping_criteria=stop,
+        max_failures=max_failures,
+        max_experiment_failures=max_experiment_failures,
     )
     if log_dir:
         import weakref

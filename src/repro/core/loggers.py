@@ -22,6 +22,9 @@ class Logger:
     def on_result(self, trial: Trial, result: Result) -> None:
         pass
 
+    def on_event(self, trial: Trial, event: Any) -> None:
+        """Non-result TrialEvents (CHECKPOINTED / HEARTBEAT_MISSED / RESTARTED)."""
+
     def on_trial_complete(self, trial: Trial) -> None:
         pass
 
@@ -54,6 +57,21 @@ class ConsoleLogger(Logger):
                 file=self.stream,
             )
 
+    def on_event(self, trial: Trial, event: Any) -> None:
+        if not self.verbose:
+            return
+        kind = getattr(event, "type", None)
+        kind = getattr(kind, "value", str(kind))
+        if kind == "HEARTBEAT_MISSED":
+            print(f"[tune] WARNING {trial.trial_id} straggling: no progress for "
+                  f"{event.info.get('stalled_s', '?')}s", file=self.stream)
+        elif kind == "RESTARTED":
+            where = ("last checkpoint" if event.checkpoint is not None else "scratch")
+            print(f"[tune] {trial.trial_id} failed "
+                  f"({event.info.get('num_failures', '?')}/"
+                  f"{event.info.get('max_failures', '?')}); restarting from {where}",
+                  file=self.stream)
+
     def on_experiment_end(self, trials: List[Trial]) -> None:
         if not self.verbose:
             return
@@ -83,6 +101,7 @@ class CSVLogger(Logger):
         row = {"training_iteration": result.training_iteration, "timestamp": result.timestamp}
         row.update({k: v for k, v in result.metrics.items()})
         w.writerow(row)
+        f.flush()  # a crashed run must not lose the tail of the metrics log
 
     def close(self) -> None:
         for f, _ in self._writers.values():
@@ -106,6 +125,18 @@ class JSONLLogger(Logger):
                         if isinstance(v, (int, float, str, bool, type(None)))},
             "t": result.timestamp,
         }) + "\n")
+        self.f.flush()  # a crashed run must not lose the tail of the event log
+
+    def on_event(self, trial: Trial, event: Any) -> None:
+        kind = getattr(event, "type", None)
+        self.f.write(json.dumps({
+            "event": getattr(kind, "value", str(kind)).lower(),
+            "trial_id": trial.trial_id,
+            "seq": getattr(event, "seq", -1),
+            "info": getattr(event, "info", {}),
+            "t": getattr(event, "timestamp", time.time()),
+        }) + "\n")
+        self.f.flush()
 
     def on_trial_complete(self, trial: Trial) -> None:
         self.f.write(json.dumps({
@@ -125,6 +156,10 @@ class CompositeLogger(Logger):
     def on_result(self, trial, result):
         for lg in self.loggers:
             lg.on_result(trial, result)
+
+    def on_event(self, trial, event):
+        for lg in self.loggers:
+            lg.on_event(trial, event)
 
     def on_trial_complete(self, trial):
         for lg in self.loggers:

@@ -2,15 +2,22 @@
 
 One ``step()`` = (1) launch trials while the scheduler offers one and resources
 allow (pulling fresh suggestions from the searcher when the explicit trial list
-is exhausted); (2) collect the next intermediate result; (3) let the scheduler
-decide CONTINUE / PAUSE / STOP / RESTART_WITH_CONFIG and apply it.  Trial
-metadata is kept in memory; fault tolerance is via checkpoints (paper §4.2).
+is exhausted); (2) drain the next ``TrialEvent`` from the executor (worker
+threads push RESULT/ERROR/CHECKPOINTED/HEARTBEAT_MISSED onto an EventBus;
+poll-style executors are adapted by ``TrialExecutor.get_next_event``'s compat
+shim); (3) let the scheduler decide CONTINUE / PAUSE / STOP /
+RESTART_WITH_CONFIG and apply it.  Trial metadata is kept in memory; fault
+tolerance is via checkpoints (paper §4.2): a trial whose trainable raises is
+restarted from its last checkpoint up to ``max_failures`` times before it is
+marked ERROR, and the experiment aborts when errored trials exceed
+``max_experiment_failures``.
 """
 from __future__ import annotations
 
 import itertools
 from typing import Any, Dict, List, Optional
 
+from .events import EventType, TrialEvent
 from .executor import TrialExecutor
 from .loggers import Logger
 from .resources import Resources
@@ -32,7 +39,8 @@ class TrialRunner:
         default_resources: Optional[Resources] = None,
         stopping_criteria: Optional[Dict[str, float]] = None,
         max_pending_from_searcher: int = 0,  # 0 = unlimited
-        max_failures: int = 0,
+        max_failures: int = 0,               # per-trial restarts-from-checkpoint
+        max_experiment_failures: int = 0,    # 0 = unlimited errored trials
     ):
         self.scheduler = scheduler
         self.executor = executor
@@ -43,11 +51,13 @@ class TrialRunner:
         self.stopping_criteria = dict(stopping_criteria or {})
         self.max_pending_from_searcher = max_pending_from_searcher
         self.max_failures = max_failures
+        self.max_experiment_failures = max_experiment_failures
         self.trials: List[Trial] = []
         self._by_id: Dict[str, Trial] = {}
         self._searcher_exhausted = searcher is None
         self._suggest_counter = itertools.count()
         self.n_errors = 0
+        self.n_restarts = 0
 
     # -- trial management ------------------------------------------------------
     def add_trial(self, trial: Trial) -> None:
@@ -131,16 +141,14 @@ class TrialRunner:
             ok = self.executor.start_trial(trial, checkpoint=checkpoint)
             if not ok:
                 if trial.status == TrialStatus.ERROR:
-                    self.n_errors += 1
-                    self.scheduler.on_trial_error(self, trial)
-                    self._observe(trial, final=True)
+                    self._finalize_error(trial)
                     continue
                 return  # no resources after all
 
     def step(self) -> bool:
         """Process one event. Returns False when the experiment is finished."""
         self._launch_loop()
-        event = self.executor.get_next_result()
+        event = self.executor.get_next_event()
         if event is None:
             if not self.is_finished():
                 self._stall_count = getattr(self, "_stall_count", 0) + 1
@@ -154,16 +162,26 @@ class TrialRunner:
                 return True
             return False
         self._stall_count = 0
-        trial, payload = event
-
-        if isinstance(payload, Exception):
-            self.n_errors += 1
-            self.executor.stop_trial(trial, error=str(payload))
-            self.scheduler.on_trial_error(self, trial)
-            self._observe(trial, final=True)
+        trial = self.get_trial(event.trial_id)
+        if trial is None:  # event for a trial this runner never adopted
             return not self.is_finished()
 
-        result: Result = payload
+        if event.type in (EventType.CHECKPOINTED, EventType.HEARTBEAT_MISSED,
+                          EventType.RESTARTED):
+            # Observability events: no scheduler decision, just the loggers.
+            self.logger.on_event(trial, event)
+            return not self.is_finished()
+
+        if event.type == EventType.ERROR:
+            return self._handle_trial_error(trial, event.error or "unknown trial error")
+
+        if trial.status != TrialStatus.RUNNING:
+            # Stale RESULT from a worker halted mid-step (e.g. abandoned after
+            # a join timeout, trial since requeued): acting on it would gate a
+            # relaunched instance twice.  Drop it.
+            return not self.is_finished()
+
+        result: Result = event.result
         trial.record_result(result)
         self.logger.on_result(trial, result)
 
@@ -176,8 +194,46 @@ class TrialRunner:
         self._apply(trial, decision)
         return not self.is_finished()
 
+    # -- failure handling --------------------------------------------------------
+    def _handle_trial_error(self, trial: Trial, error: str) -> bool:
+        trial.num_failures = getattr(trial, "num_failures", 0) + 1
+        retryable = (
+            self.max_failures > 0
+            and trial.num_failures <= self.max_failures
+            and not trial.status.is_finished()
+        )
+        if retryable:
+            # Tear down the dead instance; the trial re-enters the launch loop
+            # PAUSED (restore from last checkpoint) or PENDING (from scratch).
+            self.n_restarts += 1
+            self.executor.requeue_trial(trial)
+            self.logger.on_event(trial, TrialEvent(
+                EventType.RESTARTED, trial.trial_id, error=error,
+                checkpoint=trial.checkpoint,
+                info={"num_failures": trial.num_failures,
+                      "max_failures": self.max_failures,
+                      # keep the cause on record even when the retry succeeds
+                      "error": error[-2000:]}))
+            return True
+        self.executor.stop_trial(trial, error=error)
+        self._finalize_error(trial)
+        return not self.is_finished()
+
+    def _finalize_error(self, trial: Trial) -> None:
+        self.n_errors += 1
+        self.scheduler.on_trial_error(self, trial)
+        self._observe(trial, final=True)
+        if self.max_experiment_failures and self.n_errors > self.max_experiment_failures:
+            self.executor.shutdown()
+            raise RuntimeError(
+                f"experiment aborted: {self.n_errors} errored trials exceed "
+                f"max_experiment_failures={self.max_experiment_failures} "
+                f"(last error on {trial.trial_id}: {trial.error})"
+            )
+
     def _apply(self, trial: Trial, decision: SchedulerDecision) -> None:
         if decision == SchedulerDecision.CONTINUE:
+            self.executor.resume_trial(trial)
             return
         if decision == SchedulerDecision.PAUSE:
             self.executor.pause_trial(trial)
@@ -191,6 +247,8 @@ class TrialRunner:
                     "RESTART_WITH_CONFIG requires scheduler_state['restore_from'/'new_config']"
                 )
             self.executor.restart_trial_with_config(trial, ckpt, new_config)
+            if trial.status == TrialStatus.ERROR:
+                self._finalize_error(trial)
         else:
             raise ValueError(f"unknown scheduler decision {decision}")
 

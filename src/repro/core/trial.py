@@ -94,6 +94,7 @@ class Trial:
         self.results: List[Result] = []
         self.checkpoint: Optional[Checkpoint] = None
         self.error: Optional[str] = None
+        self.num_failures = 0  # restarts consumed against the runner's max_failures
         self.start_time: Optional[float] = None
         # bookkeeping for schedulers (e.g. PBT perturbation history)
         self.scheduler_state: Dict[str, Any] = {}

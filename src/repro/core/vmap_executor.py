@@ -157,6 +157,14 @@ class VmapExecutor(TrialExecutor):
         else:
             trial.set_status(TrialStatus.TERMINATED)
 
+    def requeue_trial(self, trial: Trial) -> None:
+        lane = self._lane_of(trial)
+        if lane is not None:
+            self._lane_trial[lane] = None
+            self.accountant.release(trial.resources)
+        trial.set_status(
+            TrialStatus.PAUSED if trial.checkpoint is not None else TrialStatus.PENDING)
+
     def restart_trial_with_config(self, trial, checkpoint, new_config) -> None:
         """PBT exploit: load donor snapshot into this trial's lane with the
         mutated hypers — an O(1) lane-slice copy, no process churn."""

@@ -1,11 +1,15 @@
 """Distributed hyperparameter search launcher — the paper's workload.
 
     PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
-        --scheduler asha --num-samples 16 --max-iters 20
+        --scheduler asha --num-samples 16 --max-iters 20 --executor concurrent
 
 Runs a Tune experiment over a model's optimizer hyperparameters with any of
 the six built-in schedulers, optionally driven by a searcher (TPE/random),
-with trials placed on mesh slices via the SlicePool.
+with trials placed on mesh slices via the SlicePool.  ``--executor`` picks the
+execution tier: ``serial`` (host time-slicing), ``concurrent`` (one worker
+thread per trial, overlapped JAX dispatch across disjoint slices, heartbeat
+straggler detection), or ``vmap`` (homogeneous sweeps as one SPMD program).
+``--max-failures`` restarts a crashed trial from its last checkpoint.
 """
 from __future__ import annotations
 
@@ -19,6 +23,48 @@ from ..core import (ASHAScheduler, FIFOScheduler, GPSearcher,
                     RandomSearcher, loguniform, run_experiments, uniform)
 from ..dist.submesh import SlicePool
 from ..train.trainable import make_model_trainable
+
+
+def build_vmap_executor(cfg, args):
+    """Model selection as one SPMD program: N lanes of the same tiny LM,
+    vmapped over (lr, weight_decay) with momentum SGD (see bench_vmap.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import CheckpointManager, ObjectStore
+    from ..core.vmap_executor import VectorTrainableSpec, VmapExecutor
+    from ..data import DataConfig, SyntheticLMDataset
+    from ..models import forward_train, init_params
+
+    data = SyntheticLMDataset(DataConfig(global_batch=args.batch,
+                                         seq_len=args.seq_len,
+                                         vocab_size=cfg.vocab_size))
+    n_banked = 8
+    batches = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree_util.tree_map(jnp.asarray, data.batch_at(i))
+          for i in range(n_banked)])
+
+    def init_fn(seed, hypers):
+        params = init_params(jax.random.key(seed), cfg)
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"p": params, "m": mom, "i": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, hypers):
+        batch = jax.tree_util.tree_map(lambda x: x[state["i"] % n_banked], batches)
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: forward_train(p, batch, cfg), has_aux=True)(state["p"])
+        m = jax.tree_util.tree_map(lambda mo, g: 0.9 * mo + g, state["m"], grads)
+        p = jax.tree_util.tree_map(
+            lambda w, mo: w - hypers["lr"] * (mo + hypers["weight_decay"] * w),
+            state["p"], m)
+        return {"p": p, "m": m, "i": state["i"] + 1}, {"loss": metrics["loss"]}
+
+    spec = VectorTrainableSpec(init_fn, step_fn, ("lr", "weight_decay"),
+                               steps_per_iter=args.steps_per_iter)
+    return VmapExecutor(spec, CheckpointManager(ObjectStore()),
+                        n_lanes=min(args.num_samples, 8),
+                        total_devices=args.total_devices)
 
 
 def build_scheduler(name: str, max_iters: int):
@@ -54,6 +100,17 @@ def main() -> None:
     ap.add_argument("--steps-per-iter", type=int, default=3)
     ap.add_argument("--devices-per-trial", type=int, default=8)
     ap.add_argument("--total-devices", type=int, default=256)
+    ap.add_argument("--executor", default="serial",
+                    choices=["serial", "concurrent", "vmap"])
+    ap.add_argument("--max-failures", type=int, default=0,
+                    help="restart a crashed trial from its last checkpoint up "
+                         "to N times before marking it ERROR")
+    ap.add_argument("--max-experiment-failures", type=int, default=0,
+                    help="abort the experiment once more than N trials errored "
+                         "(0 = never)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
+                    help="concurrent executor: seconds before a stalled step "
+                         "emits HEARTBEAT_MISSED")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -79,7 +136,12 @@ def main() -> None:
         searcher = RandomSearcher(space, metric="loss", mode="min",
                                   max_trials=args.num_samples, seed=args.seed)
 
-    pool = SlicePool(n_virtual=args.total_devices)
+    if args.executor == "vmap":
+        executor = build_vmap_executor(cfg, args)
+        pool = None  # lanes replace slices; placement is the stacked program's
+    else:
+        executor = args.executor
+        pool = SlicePool(n_virtual=args.total_devices)
     analysis = run_experiments(
         trainable,
         None if searcher else space,
@@ -90,6 +152,10 @@ def main() -> None:
         resources_per_trial=Resources(cpu=1, devices=args.devices_per_trial),
         total_devices=args.total_devices,
         slice_pool=pool,
+        executor=executor,
+        max_failures=args.max_failures,
+        max_experiment_failures=args.max_experiment_failures,
+        heartbeat_timeout=args.heartbeat_timeout,
         log_dir=args.log_dir,
         verbose=True,
         seed=args.seed,

@@ -1,0 +1,384 @@
+"""ConcurrentMeshExecutor + fault tolerance: worker-thread stepping under the
+full scheduler matrix, restart-from-checkpoint bounded by max_failures, the
+experiment-level error cap, straggler heartbeats, PBT restart error surfacing,
+and crash-durable metric logs."""
+import csv
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import (ASHAScheduler, CheckpointManager, ConcurrentMeshExecutor,
+                        EventType, FIFOScheduler, HyperBandScheduler,
+                        MedianStoppingRule, ObjectStore, PopulationBasedTraining,
+                        Resources, SerialMeshExecutor, Trainable, Trial,
+                        TrialRunner, TrialStatus, loguniform, run_experiments)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class LrCounter(Trainable):
+    """Cheap surrogate with an lr-separable loss (drives every scheduler)."""
+
+    def setup(self, config):
+        self.n = 0
+        self.lr = float(config.get("lr", 0.01))
+
+    def step(self):
+        self.n += 1
+        time.sleep(0.001)  # a sliver of "device work" to overlap
+        return {"loss": (self.lr - 0.01) ** 2 + 1.0 / self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+    def reset_config(self, new_config):
+        self.lr = float(new_config.get("lr", self.lr))
+        self.config = dict(new_config)
+        return True
+
+
+def make_flaky(fail_at: int, max_crashes: int):
+    """A Counter that raises at iteration ``fail_at``, ``max_crashes`` times
+    total across rebuilds (class-level counter survives restarts)."""
+
+    class Flaky(Trainable):
+        crashes = 0
+
+        def setup(self, config):
+            self.n = 0
+
+        def step(self):
+            self.n += 1
+            if self.n == fail_at and type(self).crashes < max_crashes:
+                type(self).crashes += 1
+                raise RuntimeError(f"injected failure #{type(self).crashes}")
+            return {"loss": 1.0 / self.n}
+
+        def save(self):
+            return {"n": self.n}
+
+        def restore(self, state):
+            self.n = state["n"]
+
+    return Flaky
+
+
+def make_concurrent(cls, devices=8, checkpoint_freq=1, **kw):
+    return ConcurrentMeshExecutor(lambda name: cls,
+                                  CheckpointManager(ObjectStore()),
+                                  total_devices=devices,
+                                  checkpoint_freq=checkpoint_freq, **kw)
+
+
+SCHEDULERS = {
+    "fifo": lambda: FIFOScheduler(metric="loss", mode="min"),
+    "asha": lambda: ASHAScheduler(metric="loss", mode="min", max_t=6,
+                                  grace_period=2, reduction_factor=2),
+    "hyperband": lambda: HyperBandScheduler(metric="loss", mode="min",
+                                            max_t=4, eta=2),
+    "median": lambda: MedianStoppingRule(metric="loss", mode="min",
+                                         grace_period=2, min_samples_required=2),
+    "pbt": lambda: PopulationBasedTraining(
+        metric="loss", mode="min", perturbation_interval=2,
+        hyperparam_mutations={"lr": loguniform(1e-4, 1e-1)}, seed=0),
+}
+
+
+class TestSchedulerMatrix:
+    @pytest.mark.parametrize("name", list(SCHEDULERS))
+    def test_scheduler_on_concurrent_executor(self, name):
+        an = run_experiments(
+            LrCounter,
+            {"lr": loguniform(1e-3, 1e-1)},
+            scheduler=SCHEDULERS[name](),
+            num_samples=4,
+            stop={"training_iteration": 6},
+            total_devices=4,
+            checkpoint_freq=1,
+            executor="concurrent",
+            seed=0,
+        )
+        assert an.best_value() is not None
+        finished = [t for t in an.trials if t.status == TrialStatus.TERMINATED]
+        assert finished, f"{name}: no trial finished"
+        for t in an.trials:  # per-trial results arrive strictly in order
+            iters = [r.training_iteration for r in t.results]
+            assert iters == sorted(iters), (name, t.trial_id, iters)
+
+
+class TestConcurrentBasics:
+    def test_parallel_limited_by_resources(self):
+        ex = make_concurrent(LrCounter, devices=2, checkpoint_freq=0)
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             stopping_criteria={"training_iteration": 3})
+        for _ in range(5):
+            runner.add_trial(Trial({}, resources=Resources(devices=1),
+                                   stopping_criteria={"training_iteration": 3}))
+        runner.step()
+        running = sum(1 for t in runner.trials if t.status == TrialStatus.RUNNING)
+        assert running == 2
+        trials = runner.run()
+        assert all(t.status == TrialStatus.TERMINATED for t in trials)
+        assert all(t.training_iteration == 3 for t in trials)
+
+    def test_function_trainable_on_concurrent(self):
+        from repro.core import wrap_function
+
+        def train(tune):
+            x = 0.0
+            for _ in range(4):
+                x += tune.params["inc"]
+                tune.report(value=x)
+
+        ex = make_concurrent(wrap_function(train), checkpoint_freq=0)
+        runner = TrialRunner(FIFOScheduler(metric="value", mode="max"), ex)
+        runner.add_trial(Trial({"inc": 2.0}))
+        (trial,) = runner.run()
+        assert trial.status == TrialStatus.TERMINATED
+        vals = [r.metrics["value"] for r in trial.results if "value" in r.metrics]
+        assert vals == [2.0, 4.0, 6.0, 8.0]  # the trailing result is the bare done
+
+
+class TestFaultTolerance:
+    def test_concurrent_recovers_and_matches_clean_run(self):
+        # clean reference run
+        clean_ex = make_concurrent(make_flaky(3, 0))
+        clean = TrialRunner(FIFOScheduler(metric="loss", mode="min"), clean_ex,
+                            stopping_criteria={"training_iteration": 5})
+        clean.add_trial(Trial({}, stopping_criteria={"training_iteration": 5}))
+        (clean_t,) = clean.run()
+        assert clean_t.status == TrialStatus.TERMINATED
+
+        # crashes twice at iteration 3; max_failures=2 absorbs both
+        from repro.core import Logger
+
+        class Recorder(Logger):
+            events = []
+
+            def on_event(self, trial, event):
+                type(self).events.append(event)
+
+        ex = make_concurrent(make_flaky(3, 2))
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             logger=Recorder(),
+                             stopping_criteria={"training_iteration": 5},
+                             max_failures=2)
+        trial = Trial({}, stopping_criteria={"training_iteration": 5})
+        runner.add_trial(trial)
+        runner.run()
+        assert trial.status == TrialStatus.TERMINATED
+        assert trial.num_failures == 2
+        assert runner.n_restarts == 2 and runner.n_errors == 0
+        restarts = [e for e in Recorder.events if e.type == EventType.RESTARTED]
+        assert len(restarts) == 2  # exactly one RESTARTED per retry, not two
+        assert [r.training_iteration for r in trial.results] == \
+               [r.training_iteration for r in clean_t.results]
+        assert trial.last_result.metrics["loss"] == \
+               pytest.approx(clean_t.last_result.metrics["loss"])
+
+    def test_serial_executor_retries_too(self):
+        cls = make_flaky(2, 1)
+        ex = SerialMeshExecutor(lambda n: cls, CheckpointManager(ObjectStore()),
+                                total_devices=4, checkpoint_freq=1)
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             stopping_criteria={"training_iteration": 4},
+                             max_failures=1)
+        trial = Trial({}, stopping_criteria={"training_iteration": 4})
+        runner.add_trial(trial)
+        runner.run()
+        assert trial.status == TrialStatus.TERMINATED
+        assert trial.num_failures == 1
+        assert trial.training_iteration == 4
+
+    def test_failure_budget_exhausted_marks_error(self):
+        ex = make_concurrent(make_flaky(2, 99))  # fails every time it reaches 2
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             stopping_criteria={"training_iteration": 5},
+                             max_failures=2)
+        trial = Trial({}, stopping_criteria={"training_iteration": 5})
+        runner.add_trial(trial)
+        runner.run()
+        assert trial.status == TrialStatus.ERROR
+        assert trial.num_failures == 3  # 2 retries + the final fatal one
+        assert "injected failure" in trial.error
+        assert runner.n_errors == 1
+
+    def test_experiment_error_cap_aborts(self):
+        ex = make_concurrent(make_flaky(1, 99))
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             stopping_criteria={"training_iteration": 5},
+                             max_experiment_failures=1)
+        for _ in range(3):
+            runner.add_trial(Trial({}, stopping_criteria={"training_iteration": 5}))
+        with pytest.raises(RuntimeError, match="experiment aborted"):
+            runner.run()
+        assert runner.n_errors == 2  # aborted as soon as the cap was crossed
+
+
+class TestRestartWithConfigSurfaced:
+    """PBT restart failures may no longer leave a PAUSED, sliceless trial."""
+
+    class NoReset(Trainable):
+        def setup(self, config):
+            if config.get("explode"):
+                raise RuntimeError("bad rebuild config")
+            self.n = 0
+
+        def step(self):
+            self.n += 1
+            return {"loss": 1.0 / self.n}
+
+        def save(self):
+            return {"n": self.n}
+
+        def restore(self, state):
+            self.n = state["n"]
+
+        # reset_config inherits the base False → forces teardown + rebuild
+
+    def _started(self):
+        ex = SerialMeshExecutor(lambda n: self.NoReset,
+                                CheckpointManager(ObjectStore()), total_devices=4)
+        trial = Trial({}, resources=Resources(devices=2))
+        assert ex.start_trial(trial)
+        ex.get_next_result()
+        ckpt = ex.save_checkpoint(trial)
+        return ex, trial, ckpt
+
+    def test_no_resources_requeues_with_donor_checkpoint(self):
+        ex, trial, ckpt = self._started()
+        ex.accountant.has_room = lambda r: False  # rebuild finds no capacity
+        ex.restart_trial_with_config(trial, ckpt, {"lr": 0.5})
+        assert trial.status == TrialStatus.PAUSED
+        assert trial.checkpoint is ckpt  # re-launch restores the donor state
+        assert trial.config == {"lr": 0.5}
+        assert trial.trial_id not in ex._running
+
+    def test_rebuild_error_marks_trial_error(self):
+        ex, trial, ckpt = self._started()
+        ex.restart_trial_with_config(trial, ckpt, {"explode": True})
+        assert trial.status == TrialStatus.ERROR
+        assert "bad rebuild config" in trial.error
+
+
+class TestHeartbeat:
+    class Slow(Trainable):
+        def setup(self, config):
+            self.n = 0
+
+        def step(self):
+            time.sleep(0.6)
+            self.n += 1
+            return {"loss": 1.0}
+
+        def save(self):
+            return {"n": self.n}
+
+        def restore(self, state):
+            self.n = state["n"]
+
+    def test_straggler_emits_heartbeat_missed(self):
+        ex = make_concurrent(self.Slow, checkpoint_freq=0,
+                             heartbeat_timeout=0.15)
+        trial = Trial({}, stopping_criteria={"training_iteration": 1})
+        assert ex.start_trial(trial)
+        seen = set()
+        deadline = time.time() + 10
+        while time.time() < deadline and EventType.RESULT not in seen:
+            ev = ex.get_next_event(timeout=1.0)
+            if ev is not None:
+                seen.add(ev.type)
+        ex.shutdown()
+        assert EventType.HEARTBEAT_MISSED in seen
+        assert EventType.RESULT in seen
+
+
+class TestAbandonedWorker:
+    """A worker whose join times out mid-step is abandoned: its slice leaks
+    (never handed to another trial while the thread still dispatches on it)
+    and its stale result/checkpoint are discarded, not published."""
+
+    class Stuck(Trainable):
+        def setup(self, config):
+            self.n = 0
+
+        def step(self):
+            time.sleep(1.5)
+            self.n += 1
+            return {"loss": 1.0}
+
+        def save(self):
+            return {"n": self.n}
+
+        def restore(self, state):
+            self.n = state["n"]
+
+    def test_join_timeout_leaks_slice_and_discards_result(self):
+        ex = make_concurrent(self.Stuck, devices=2, checkpoint_freq=1,
+                             heartbeat_timeout=0, join_timeout=0.1)
+        trial = Trial({}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 3})
+        assert ex.start_trial(trial)
+        time.sleep(0.3)  # worker is inside the 1.5s step
+        ex.pause_trial(trial)  # join times out -> worker abandoned
+        assert trial.status == TrialStatus.PAUSED
+        assert trial.checkpoint is None       # no torn checkpoint was written
+        assert not ex.has_running()
+        assert not ex.has_resources(trial)    # slice leaked on purpose
+        time.sleep(1.6)                       # stale step completes after halt
+        assert ex.bus.empty()                 # its result was discarded
+        ex.shutdown()
+
+
+_CRASH_SCRIPT = """
+import os, sys
+from repro.core import Trainable, run_experiments
+
+class Killer(Trainable):
+    def setup(self, config):
+        self.n = 0
+    def step(self):
+        self.n += 1
+        if self.n == 7:
+            os._exit(7)  # hard crash: no atexit, no buffered-file flush
+        return {"loss": 1.0 / self.n}
+    def save(self):
+        return {"n": self.n}
+    def restore(self, state):
+        self.n = state["n"]
+
+run_experiments(Killer, {"lr": 0.1}, stop={"training_iteration": 20},
+                checkpoint_freq=0, log_dir=sys.argv[1])
+"""
+
+
+class TestCrashDurableLogs:
+    def test_logs_complete_after_hard_kill(self, tmp_path):
+        """A run killed mid-flight keeps every already-reported result in the
+        CSV and JSONL logs (per-result flush; satellite of DESIGN.md §4)."""
+        log_dir = str(tmp_path / "run")
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src"),
+                   JAX_PLATFORMS="cpu")
+        proc = subprocess.run([sys.executable, "-c", _CRASH_SCRIPT, log_dir],
+                              env=env, cwd=REPO, timeout=120,
+                              capture_output=True, text=True)
+        assert proc.returncode == 7, proc.stderr
+
+        (csv_path,) = glob.glob(os.path.join(log_dir, "csv", "*.csv"))
+        with open(csv_path, newline="") as f:
+            rows = list(csv.DictReader(f))
+        assert [int(r["training_iteration"]) for r in rows] == [1, 2, 3, 4, 5, 6]
+
+        with open(os.path.join(log_dir, "events.jsonl")) as f:
+            events = [json.loads(line) for line in f]
+        results = [e for e in events if e["event"] == "result"]
+        assert [e["iteration"] for e in results] == [1, 2, 3, 4, 5, 6]

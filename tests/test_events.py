@@ -1,0 +1,129 @@
+"""EventBus contract: typed events, atomic sequencing, thread-safe FIFO
+delivery, and the poll-style executor compat shim."""
+import threading
+
+from repro.core import (CheckpointManager, EventBus, EventType, FIFOScheduler,
+                        ObjectStore, Result, SerialMeshExecutor, Trainable,
+                        Trial, TrialEvent)
+
+
+class Two(Trainable):
+    def setup(self, config):
+        self.fail = config.get("fail", False)
+
+    def step(self):
+        if self.fail:
+            raise RuntimeError("kaput")
+        return {"loss": 0.5}
+
+    def save(self):
+        return {}
+
+    def restore(self, state):
+        pass
+
+
+class TestEventBus:
+    def test_fifo_and_seq(self):
+        bus = EventBus()
+        for i in range(5):
+            bus.publish(TrialEvent(EventType.RESULT, f"t{i}"))
+        out = bus.drain()
+        assert [e.trial_id for e in out] == [f"t{i}" for i in range(5)]
+        assert [e.seq for e in out] == [0, 1, 2, 3, 4]
+        assert bus.empty() and len(bus) == 0
+        assert bus.n_published == 5
+
+    def test_get_timeout_returns_none(self):
+        bus = EventBus()
+        assert bus.get() is None
+        assert bus.get(timeout=0.01) is None
+
+    def test_concurrent_publishers_ordering(self):
+        """seq order == delivery order, and per-producer FIFO is preserved,
+        under many concurrent publisher threads."""
+        bus = EventBus()
+        n_threads, n_events = 8, 200
+        barrier = threading.Barrier(n_threads)
+
+        def produce(tid):
+            barrier.wait()
+            for i in range(n_events):
+                bus.publish(TrialEvent(EventType.RESULT, f"p{tid}",
+                                       info={"i": i}))
+
+        threads = [threading.Thread(target=produce, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        events = bus.drain()
+        assert len(events) == n_threads * n_events
+        # global sequence numbers are exactly the delivery order
+        assert [e.seq for e in events] == list(range(n_threads * n_events))
+        # each producer's events arrive in the order it published them
+        per_producer = {}
+        for e in events:
+            per_producer.setdefault(e.trial_id, []).append(e.info["i"])
+        for tid, seen in per_producer.items():
+            assert seen == list(range(n_events)), tid
+
+    def test_concurrent_drain_while_publishing(self):
+        """A consumer draining concurrently with publishers loses nothing."""
+        bus = EventBus()
+        total = 500
+        collected = []
+        done = threading.Event()
+
+        def consume():
+            while not (done.is_set() and bus.empty()):
+                ev = bus.get(timeout=0.01)
+                if ev is not None:
+                    collected.append(ev)
+
+        consumer = threading.Thread(target=consume)
+        consumer.start()
+        producers = [threading.Thread(
+            target=lambda lo: [bus.publish(TrialEvent(EventType.RESULT, str(i)))
+                               for i in range(lo, lo + 100)],
+            args=(k * 100,)) for k in range(total // 100)]
+        for p in producers:
+            p.start()
+        for p in producers:
+            p.join()
+        done.set()
+        consumer.join(timeout=5)
+        assert len(collected) == total
+        assert sorted(e.seq for e in collected) == list(range(total))
+
+
+class TestCompatShim:
+    """Poll-style executors keep working through TrialExecutor.get_next_event."""
+
+    def _executor(self):
+        return SerialMeshExecutor(lambda n: Two, CheckpointManager(ObjectStore()),
+                                  total_devices=4, checkpoint_freq=0)
+
+    def test_result_event(self):
+        ex = self._executor()
+        trial = Trial({}, stopping_criteria={"training_iteration": 3})
+        assert ex.start_trial(trial)
+        ev = ex.get_next_event()
+        assert ev.type == EventType.RESULT
+        assert ev.trial_id == trial.trial_id
+        assert isinstance(ev.result, Result)
+        assert ev.result.metrics["loss"] == 0.5
+        ex.shutdown()
+
+    def test_error_event(self):
+        ex = self._executor()
+        trial = Trial({"fail": True})
+        assert ex.start_trial(trial)
+        ev = ex.get_next_event()
+        assert ev.type == EventType.ERROR
+        assert "kaput" in ev.error
+        ex.shutdown()
+
+    def test_empty_returns_none(self):
+        assert self._executor().get_next_event() is None
