@@ -1,0 +1,39 @@
+"""GIL-bound benchmark trainable, kept in its own featherweight module.
+
+bench_process.py's worker processes import *this* module (not bench_process
+itself) so a worker boots with nothing beyond repro.core — the benchmark must
+measure GIL contention, not the import graph.
+"""
+from __future__ import annotations
+
+from repro.core.api import Trainable
+
+__all__ = ["BusyTrainable", "_burn_n"]
+
+
+def _burn_n(n_inner: int) -> None:
+    """Module-level burn target for bench_process.measure_hw_scaling — child
+    processes rebuild it by import, so it cannot be a closure."""
+    BusyTrainable({"n_inner": n_inner}).step()
+
+
+class BusyTrainable(Trainable):
+    """One step = ``n_inner`` iterations of a pure-Python loop (holds the GIL
+    the whole time; no numpy, no sleeping, nothing releases the lock)."""
+
+    def setup(self, config):
+        self.n_inner = int(config.get("n_inner", 100_000))
+        self.acc = 0
+
+    def step(self):
+        acc = self.acc
+        for i in range(self.n_inner):
+            acc = (acc + i * i) % 1_000_000_007
+        self.acc = acc
+        return {"loss": 1.0 / (self.iteration + 1), "acc": float(acc % 97)}
+
+    def save(self):
+        return {"acc": self.acc}
+
+    def restore(self, state):
+        self.acc = state["acc"]

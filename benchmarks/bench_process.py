@@ -1,0 +1,209 @@
+"""GIL-contention benchmark: ProcessMeshExecutor vs the in-host executors.
+
+Each trial's step burns *host* CPU in pure Python (a GIL-bound loop — the
+hyperparameter-sweep analogue of heavy data preprocessing, environment
+simulation, or feature code living next to the jitted step).  On worker
+threads those steps serialize on the interpreter lock no matter how many mesh
+slices are free, so the concurrent executor degenerates to (at best) serial
+throughput.  Worker *processes* each own an interpreter: throughput scales
+with cores, and that is the gap this bench measures.
+
+    python benchmarks/bench_process.py --trials 4 --iters 20 --step-ms 100
+    python benchmarks/bench_process.py --smoke   # CI smoke
+
+Writes benchmarks/results/bench_process.csv and exits non-zero when the
+process tier is not >= --min-speedup (2x by default) faster than the
+concurrent (thread) tier in result-throughput, so CI catches a regression in
+the GIL-free stepping itself.  Spawn/boot cost is part of the measured wall —
+the speedup is what a user actually sees for a sweep of this length.
+
+The gate is hardware-aware: it first *measures* how far the same busy loop
+scales across OS processes on this host (SMT siblings, cgroup quotas and
+noisy neighbours make this far less than ``os.cpu_count()`` claims), caps the
+requirement at 75% of that ceiling, and skips the gate entirely below 1.5x
+measured scaling — a one-core host cannot express GIL relief for any executor.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_root = os.path.join(_here, os.pardir)
+_src = os.path.join(_root, "src")
+for p in (_src,):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import (CheckpointManager, ConcurrentMeshExecutor,
+                        FIFOScheduler, ObjectStore, ProcessMeshExecutor,
+                        Resources, SerialMeshExecutor, TrainableFactory, Trial,
+                        TrialRunner, TrialStatus)
+
+try:
+    from .common import write_csv
+    from ._busy import BusyTrainable, _burn_n
+except ImportError:
+    sys.path.insert(0, _here)
+    from common import write_csv
+    from _busy import BusyTrainable, _burn_n
+
+# Worker processes rebuild the trainable from the featherweight _busy module —
+# not from this one — so a worker's boot is a fork + one tiny import, and the
+# sweep measures GIL contention rather than import graphs.
+BUSY_FACTORY = TrainableFactory(target="_busy:BusyTrainable", sys_path=(_here,))
+
+
+def calibrate_n_inner(step_ms: float) -> int:
+    """Loop iterations for a ~``step_ms`` step on this host."""
+    probe = 200_000
+    t = BusyTrainable({"n_inner": probe})
+    best = min(_timed(t.step) for _ in range(3))
+    return max(10_000, int(step_ms / 1000.0 / (best / probe)))
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def measure_hw_scaling(n_procs: int, n_inner: int) -> float:
+    """How much the busy loop actually parallelizes across ``n_procs`` OS
+    processes on this host (cgroup quotas and SMT siblings make this < the
+    nominal core count).  The process executor cannot beat this — it is the
+    hardware ceiling the speedup gate is scaled by."""
+    from repro.core.workers import _default_context
+
+    reps = 5
+    single = min(_timed(lambda: _burn_n(n_inner * reps)) for _ in range(2))
+    # The workers' own context (forkserver-preloaded, spawn fallback) — a
+    # plain fork here would copy a parent that may already hold JAX/XLA and
+    # executor threads (harness mode runs this after the jax-heavy benches),
+    # which can deadlock the child before it ever reaches burn().
+    ctx = _default_context()
+    procs = [ctx.Process(target=_burn_n, args=(n_inner * reps,))
+             for _ in range(n_procs)]
+    t0 = time.perf_counter()
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    multi = time.perf_counter() - t0
+    return max(1.0, n_procs * single / multi)
+
+
+def run_sweep(kind: str, n_trials: int, iters: int, n_inner: int,
+              devices_per_trial: int = 2) -> Dict:
+    from repro.dist.submesh import SlicePool  # lazy: keep spawn re-imports light
+
+    total = n_trials * devices_per_trial
+    pool = SlicePool(n_virtual=total)
+    common = dict(checkpoint_manager=CheckpointManager(ObjectStore()),
+                  total_devices=total, slice_pool=pool, checkpoint_freq=0)
+    if kind == "process":
+        executor = ProcessMeshExecutor(
+            factory_resolver=lambda name: BUSY_FACTORY, **common)
+    elif kind == "concurrent":
+        executor = ConcurrentMeshExecutor(lambda n: BusyTrainable, **common)
+    else:
+        executor = SerialMeshExecutor(lambda n: BusyTrainable, **common)
+    runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
+                         stopping_criteria={"training_iteration": iters})
+    for _ in range(n_trials):
+        runner.add_trial(Trial({"n_inner": n_inner},
+                               resources=Resources(devices=devices_per_trial),
+                               stopping_criteria={"training_iteration": iters}))
+    t0 = time.time()
+    trials = runner.run()
+    wall = time.time() - t0
+    assert all(t.status == TrialStatus.TERMINATED for t in trials), \
+        [(t.status, t.error) for t in trials]
+    n_results = sum(t.training_iteration for t in trials)
+    # Steady-state rate: first result -> last result, i.e. with worker boot
+    # (interpreter fork/spawn) amortized away.  Long real sweeps approach this.
+    ts = sorted(r.timestamp for t in trials for r in t.results)
+    steady = (len(ts) - 1) / max(ts[-1] - ts[0], 1e-9) if len(ts) > 1 else 0.0
+    return {"bench": "process_exec", "executor": kind, "n_trials": n_trials,
+            "iters": iters, "n_inner": n_inner, "wall_s": round(wall, 3),
+            "results_per_s": round(n_results / wall, 2),
+            "steady_results_per_s": round(steady, 2)}
+
+
+def run(n_trials: int = 4, iters: int = 20, step_ms: float = 100.0) -> List[Dict]:
+    """Harness entry (benchmarks.run): returns the result rows."""
+    n_inner = calibrate_n_inner(step_ms)
+    hw_scaling = measure_hw_scaling(min(n_trials, os.cpu_count() or 1), n_inner)
+    print(f"[bench_process] calibrated n_inner={n_inner} (~{step_ms:.0f}ms/step); "
+          f"{os.cpu_count()} cores, measured process scaling {hw_scaling:.2f}x")
+    rows: List[Dict] = []
+    for kind in ("serial", "concurrent", "process"):
+        row = run_sweep(kind, n_trials, iters, n_inner)
+        row["hw_scaling"] = round(hw_scaling, 2)
+        print(f"[bench_process] {kind:10s} wall={row['wall_s']:.3f}s "
+              f"throughput={row['results_per_s']:.2f} results/s "
+              f"(steady {row['steady_results_per_s']:.2f}/s)")
+        rows.append(row)
+    by_kind = {r["executor"]: r for r in rows}
+    speedup = by_kind["process"]["results_per_s"] / by_kind["concurrent"]["results_per_s"]
+    for row in rows:
+        row["speedup_vs_concurrent"] = (
+            round(row["results_per_s"] / by_kind["concurrent"]["results_per_s"], 2))
+        row["steady_speedup_vs_concurrent"] = (
+            round(row["steady_results_per_s"]
+                  / max(by_kind["concurrent"]["steady_results_per_s"], 1e-9), 2))
+    path = write_csv("bench_process", rows)
+    print(f"[bench_process] process/concurrent result-throughput: {speedup:.2f}x "
+          f"({n_trials} trials x {iters} iters, GIL-bound ~{step_ms:.0f}ms steps) "
+          f"-> {path}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--step-ms", type=float, default=100.0,
+                    help="target per-step host compute (pure-Python, GIL-bound)")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="required process/concurrent throughput ratio; "
+                         "automatically capped at 75%% of the *measured* "
+                         "multi-process scaling of this host, so the gate "
+                         "tests the executor, not the core count")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: shorter sweep, same assertion")
+    args = ap.parse_args()
+    if args.smoke:
+        args.iters = min(args.iters, 12)
+
+    rows = run(args.trials, args.iters, args.step_ms)
+    proc_row = [r for r in rows if r["executor"] == "process"][0]
+    # Smoke runs are short, so worker boot would dominate the ratio; gate on
+    # the steady-state rate there (full runs amortize boot and gate end-to-end).
+    key = "steady_speedup_vs_concurrent" if args.smoke else "speedup_vs_concurrent"
+    speedup = proc_row[key]
+    hw_scaling = rows[0]["hw_scaling"]
+    if hw_scaling < 1.5:
+        # A host with no measurable multi-process parallelism (single core,
+        # tight cgroup quota, SMT-only siblings) cannot express GIL relief at
+        # all — every tier shares one interpreter-speed core.  Report, but
+        # don't fail the build on hardware the premise excludes.
+        print(f"[bench_process] SKIP gate: measured process scaling "
+              f"{hw_scaling:.2f}x < 1.5x — this host cannot express "
+              f"GIL-contention relief (results recorded for reference)")
+        return 0
+    required = min(args.min_speedup, 0.75 * hw_scaling)
+    if speedup < required:
+        print(f"[bench_process] FAIL: speedup {speedup:.2f}x < required "
+              f"{required:.2f}x (min-speedup {args.min_speedup}x capped by "
+              f"0.75 * hw scaling {hw_scaling:.2f}x)", file=sys.stderr)
+        return 1
+    print(f"[bench_process] PASS: {speedup:.2f}x >= {required:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

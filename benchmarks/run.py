@@ -9,6 +9,7 @@ benchmarks/results/*.csv.
   convergence  — scheduler quality vs budget (ASHA/HB/Median/PBT/TPE vs FIFO)
   overhead     — event-loop + checkpoint-codec throughput
   scaling      — slice-pool occupancy under irregular trials (paper §4.3.1)
+  process      — GIL-contention sweep: process vs thread vs serial executors
   vmap         — beyond-paper: stacked-vmap trial execution vs serial
   kernels      — pure-jnp oracle timings (TPU kernel baselines)
   roofline     — per-(arch x shape x mesh) table from the dry-run artifacts
@@ -24,17 +25,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="run a single bench (loc|convergence|overhead|"
-                         "scaling|async|vmap|kernels|roofline)")
+                         "scaling|async|process|vmap|kernels|roofline)")
     args = ap.parse_args()
 
     from . import (bench_async, bench_convergence, bench_kernels, bench_loc,
-                   bench_overhead, bench_roofline, bench_scaling, bench_vmap)
+                   bench_overhead, bench_process, bench_roofline,
+                   bench_scaling, bench_vmap)
     benches = {
         "loc": bench_loc.run,
         "convergence": bench_convergence.run,
         "overhead": bench_overhead.run,
         "scaling": bench_scaling.run,
         "async": bench_async.run,
+        "process": bench_process.run,
         "vmap": bench_vmap.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,

@@ -13,8 +13,11 @@ from .object_store import ObjectStore
 from .resources import ResourceAccountant, Resources
 from .runner import TrialRunner
 from .events import EventBus, EventType, TrialEvent
-from .executor import SerialMeshExecutor, TrialExecutor
+from .executor import BusDrivenExecutor, SerialMeshExecutor, TrialExecutor
 from .concurrent_executor import ConcurrentMeshExecutor
+from .process_executor import ProcessMeshExecutor
+from .workers import (ProcessWorker, TrainableFactory, factory_from_class,
+                      register_worker_factory, resolve_worker_factory)
 from .trial import Checkpoint, Result, Trial, TrialStatus
 from .schedulers.base import SchedulerDecision, TrialScheduler
 from .schedulers.fifo import FIFOScheduler
@@ -34,8 +37,11 @@ __all__ = [
     "run_experiments", "register_trainable", "ExperimentAnalysis",
     "load_experiment_state",
     "Trial", "TrialStatus", "Result", "Checkpoint",
-    "TrialRunner", "TrialExecutor", "SerialMeshExecutor",
-    "ConcurrentMeshExecutor", "EventBus", "EventType", "TrialEvent",
+    "TrialRunner", "TrialExecutor", "SerialMeshExecutor", "BusDrivenExecutor",
+    "ConcurrentMeshExecutor", "ProcessMeshExecutor",
+    "TrainableFactory", "ProcessWorker", "register_worker_factory",
+    "resolve_worker_factory", "factory_from_class",
+    "EventBus", "EventType", "TrialEvent",
     "TrialScheduler", "SchedulerDecision",
     "FIFOScheduler", "MedianStoppingRule", "ASHAScheduler",
     "AsyncHyperBandScheduler", "HyperBandScheduler", "PopulationBasedTraining",

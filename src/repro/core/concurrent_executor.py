@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, Optional
 from .api import Trainable
 from .checkpoint import CheckpointManager
 from .events import EventBus, EventType, TrialEvent
-from .executor import _SlicedExecutor
+from .executor import BusDrivenExecutor
 from .trial import Checkpoint, Result, Trial, TrialStatus
 
 __all__ = ["ConcurrentMeshExecutor"]
@@ -59,7 +59,7 @@ class _WorkerState:
         self.dead = False                 # worker exited after publishing ERROR
 
 
-class ConcurrentMeshExecutor(_SlicedExecutor):
+class ConcurrentMeshExecutor(BusDrivenExecutor):
     def __init__(
         self,
         trainable_cls_resolver: Callable[[str], type],
@@ -73,21 +73,17 @@ class ConcurrentMeshExecutor(_SlicedExecutor):
         join_timeout: float = 10.0,
     ):
         super().__init__(trainable_cls_resolver, checkpoint_manager,
-                         total_cpu, total_devices, slice_pool, checkpoint_freq)
+                         total_cpu, total_devices, slice_pool, checkpoint_freq,
+                         event_bus=event_bus)
         self.heartbeat_timeout = heartbeat_timeout
         self.join_timeout = join_timeout
-        self.bus = event_bus or EventBus()
-        self._workers: Dict[str, _WorkerState] = {}
+        self._event_wait_bound = max(60.0, join_timeout)
         self._ckpt_lock = threading.Lock()  # CheckpointManager/ObjectStore access
         self._shutdown_evt = threading.Event()
-        self._monitor_thread: Optional[threading.Thread] = None
         if heartbeat_timeout and heartbeat_timeout > 0:
             self._monitor_thread = threading.Thread(
                 target=self._monitor, name="repro-heartbeat", daemon=True)
             self._monitor_thread.start()
-
-    def has_running(self) -> bool:
-        return bool(self._workers)
 
     # -- worker loop ----------------------------------------------------------------
     def _run_worker(self, ws: _WorkerState) -> None:
@@ -203,6 +199,8 @@ class ConcurrentMeshExecutor(_SlicedExecutor):
         trainable = self._acquire_and_build(trial, state, iteration)
         if trainable is None:
             return False
+        if checkpoint is not None:
+            checkpoint.pinned = False  # consumed; rotation may reclaim it
         self._spawn(trial, trainable)
         return True
 
@@ -313,34 +311,7 @@ class ConcurrentMeshExecutor(_SlicedExecutor):
         if trainable is not None:
             self._spawn(trial, trainable)
 
-    # -- event delivery ---------------------------------------------------------------
-    def get_next_event(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
-        """Block until an event arrives or no worker can produce one.
-
-        With live workers this waits (bounded only by their progress — the
-        heartbeat monitor guarantees an eventual event for stuck steps); with
-        none it drains whatever is queued and then returns None.  When the
-        monitor is disabled that guarantee is gone, so the wait is bounded
-        (~60s) instead: the runner's stall detector stays reachable and a
-        hung step surfaces as a stall error rather than a silent hang.
-        """
-        deadline = None if timeout is None else time.time() + timeout
-        if deadline is None and self._monitor_thread is None:
-            deadline = time.time() + max(60.0, self.join_timeout)
-        while True:
-            # _workers is mutated only by this (runner) thread, so the check
-            # can't race; block on the queue in long slices instead of polling.
-            if not self._workers:
-                return self.bus.get()
-            wait = 0.5
-            if deadline is not None:
-                wait = min(wait, deadline - time.time())
-                if wait <= 0:
-                    return None
-            ev = self.bus.get(timeout=wait)
-            if ev is not None:
-                return ev
-
+    # -- event delivery: BusDrivenExecutor.get_next_event -----------------------------
     def get_trainable(self, trial_id: str) -> Optional[Trainable]:
         ws = self._workers.get(trial_id)
         return ws.trainable if ws is not None else None

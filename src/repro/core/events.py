@@ -37,6 +37,7 @@ class EventType(str, enum.Enum):
     CHECKPOINTED = "CHECKPOINTED"          # a periodic checkpoint was written
     HEARTBEAT_MISSED = "HEARTBEAT_MISSED"  # a step exceeded the straggler timeout
     RESTARTED = "RESTARTED"                # trial re-queued for restart-from-checkpoint
+    KILLED = "KILLED"                      # straggling worker process SIGKILLed (DESIGN.md §5)
 
 
 @dataclass

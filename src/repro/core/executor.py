@@ -11,17 +11,18 @@ trial a sub-mesh sized to its resource request.
 """
 from __future__ import annotations
 
+import time
 import traceback
 from collections import deque
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from .api import Trainable
 from .checkpoint import CheckpointManager
-from .events import EventType, TrialEvent
+from .events import EventBus, EventType, TrialEvent
 from .resources import ResourceAccountant, Resources
 from .trial import Checkpoint, Result, Trial, TrialStatus
 
-__all__ = ["TrialExecutor", "SerialMeshExecutor"]
+__all__ = ["TrialExecutor", "SerialMeshExecutor", "BusDrivenExecutor"]
 
 
 class TrialExecutor:
@@ -125,6 +126,57 @@ class _SlicedExecutor(TrialExecutor):
             TrialStatus.PAUSED if trial.checkpoint is not None else TrialStatus.PENDING)
 
 
+class BusDrivenExecutor(_SlicedExecutor):
+    """Base for push-style executors whose workers (threads or processes)
+    publish ``TrialEvent``s on a shared ``EventBus`` while the runner blocks in
+    ``get_next_event``.  Subclasses keep live workers in ``self._workers``
+    (mutated only from the runner thread) and may run a monitor thread in
+    ``self._monitor_thread`` that guarantees an eventual event for stuck steps.
+    """
+
+    def __init__(self, *args, event_bus: Optional[EventBus] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.bus = event_bus or EventBus()
+        self._workers: Dict[str, Any] = {}
+        self._monitor_thread: Optional[Any] = None
+        self._event_wait_bound = 60.0
+
+    def _events_guaranteed(self) -> bool:
+        """True when a monitor thread will eventually publish an event even if
+        every worker is stuck (so an unbounded runner wait is safe)."""
+        return self._monitor_thread is not None
+
+    def has_running(self) -> bool:
+        return bool(self._workers)
+
+    def get_next_event(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
+        """Block until an event arrives or no worker can produce one.
+
+        With live workers this waits (bounded only by their progress — the
+        monitor thread guarantees an eventual event for stuck steps); with
+        none it drains whatever is queued and then returns None.  When the
+        monitor is disabled that guarantee is gone, so the wait is bounded
+        (~60s) instead: the runner's stall detector stays reachable and a
+        hung step surfaces as a stall error rather than a silent hang.
+        """
+        deadline = None if timeout is None else time.time() + timeout
+        if deadline is None and not self._events_guaranteed():
+            deadline = time.time() + self._event_wait_bound
+        while True:
+            # _workers is mutated only by this (runner) thread, so the check
+            # can't race; block on the queue in long slices instead of polling.
+            if not self._workers:
+                return self.bus.get()
+            wait = 0.5
+            if deadline is not None:
+                wait = min(wait, deadline - time.time())
+                if wait <= 0:
+                    return None
+            ev = self.bus.get(timeout=wait)
+            if ev is not None:
+                return ev
+
+
 class SerialMeshExecutor(_SlicedExecutor):
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
@@ -147,6 +199,7 @@ class SerialMeshExecutor(_SlicedExecutor):
                 state = self.ckpt.restore(checkpoint)
                 trainable.restore(state)
                 trainable.iteration = checkpoint.training_iteration
+                checkpoint.pinned = False  # consumed; rotation may reclaim it
         except Exception:
             self._release(trial)
             trial.error = traceback.format_exc()

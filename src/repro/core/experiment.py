@@ -23,6 +23,7 @@ from .concurrent_executor import ConcurrentMeshExecutor
 from .executor import SerialMeshExecutor, TrialExecutor
 from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Logger
 from .object_store import ObjectStore
+from .process_executor import ProcessMeshExecutor
 from .resources import Resources
 from .runner import TrialRunner
 from .schedulers.base import TrialScheduler
@@ -30,6 +31,8 @@ from .schedulers.fifo import FIFOScheduler
 from .search.basic import Searcher
 from .search.variants import count_grid_variants, format_variant_tag, generate_variants
 from .trial import Trial, TrialStatus
+from .workers import (TrainableFactory, factory_from_class,
+                      register_worker_factory, resolve_worker_factory)
 
 __all__ = ["run_experiments", "ExperimentAnalysis", "register_trainable"]
 
@@ -40,6 +43,12 @@ def register_trainable(name: str, cls_or_fn: Union[type, Callable]) -> None:
     _REGISTRY[name] = (
         cls_or_fn if inspect.isclass(cls_or_fn) else wrap_function(cls_or_fn)
     )
+    if inspect.isclass(cls_or_fn):
+        # Opportunistically mirror importable classes into the process-worker
+        # registry so `executor="process"` works without extra ceremony.
+        factory = factory_from_class(cls_or_fn)
+        if factory is not None:
+            register_worker_factory(name, factory)
 
 
 class _StatePersister(Logger):
@@ -155,18 +164,23 @@ def run_experiments(
     max_failures: int = 0,
     max_experiment_failures: int = 0,
     heartbeat_timeout: float = 60.0,
+    straggler_deadline: float = 0.0,
     metric: Optional[str] = None,
     mode: Optional[str] = None,
     resume: bool = False,
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
 
-    ``executor`` is a TrialExecutor instance, or ``"serial"``/``"concurrent"``
-    to build one here (``"concurrent"`` steps trials on worker threads with
-    heartbeat/straggler detection — DESIGN.md §4).  ``max_failures`` restarts
-    a crashed trial from its last checkpoint up to that many times before
-    marking it ERROR; ``max_experiment_failures`` aborts the whole experiment
-    once more trials than that have errored.
+    ``executor`` is a TrialExecutor instance, or ``"serial"``/``"concurrent"``/
+    ``"process"`` to build one here (``"concurrent"`` steps trials on worker
+    threads with heartbeat/straggler detection — DESIGN.md §4; ``"process"``
+    runs each trial in a spawned worker process with GIL-free host stepping
+    and kill-on-straggle reclamation after ``straggler_deadline`` seconds —
+    DESIGN.md §5; it needs a spawn-safe trainable: an importable class or a
+    ``TrainableFactory``).  ``max_failures`` restarts a crashed trial from its
+    last checkpoint up to that many times before marking it ERROR;
+    ``max_experiment_failures`` aborts the whole experiment once more trials
+    than that have errored.
 
     ``resume=True`` (requires ``log_dir``) restores the trial list of an
     interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
@@ -180,9 +194,21 @@ def run_experiments(
         name = trainable
         if name not in _REGISTRY:
             raise KeyError(f"trainable {name!r} not registered")
+    elif isinstance(trainable, TrainableFactory):
+        # Spawn-safe recipe: register the resolved class for in-host executors
+        # AND the factory itself for process workers.
+        cls = trainable.resolve()
+        name = getattr(cls, "__name__", "trainable")
+        _REGISTRY[name] = cls
+        register_worker_factory(name, trainable)
     else:
         name = getattr(trainable, "__name__", "trainable")
         register_trainable(name, trainable)
+    if executor == "process":
+        try:
+            resolve_worker_factory(name)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
 
     # -- plumbing ------------------------------------------------------------------
     store = ObjectStore(spill_dir=os.path.join(log_dir, "spill") if log_dir else None)
@@ -204,10 +230,15 @@ def run_experiments(
         elif kind == "concurrent":
             executor = ConcurrentMeshExecutor(
                 heartbeat_timeout=heartbeat_timeout, **common)
+        elif kind == "process":
+            executor = ProcessMeshExecutor(
+                heartbeat_timeout=heartbeat_timeout,
+                straggler_deadline=straggler_deadline, **common)
         else:
             raise ValueError(
-                f"unknown executor {kind!r}; pass 'serial', 'concurrent', or a "
-                f"TrialExecutor instance (VmapExecutor needs a VectorTrainableSpec)")
+                f"unknown executor {kind!r}; pass 'serial', 'concurrent', "
+                f"'process', or a TrialExecutor instance (VmapExecutor needs "
+                f"a VectorTrainableSpec)")
     loggers: List[Logger] = [ConsoleLogger(verbose=verbose)]
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))

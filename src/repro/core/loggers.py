@@ -65,6 +65,12 @@ class ConsoleLogger(Logger):
         if kind == "HEARTBEAT_MISSED":
             print(f"[tune] WARNING {trial.trial_id} straggling: no progress for "
                   f"{event.info.get('stalled_s', '?')}s", file=self.stream)
+        elif kind == "KILLED":
+            print(f"[tune] WARNING {trial.trial_id} straggler killed "
+                  f"(pid={event.info.get('pid', '?')}, stalled "
+                  f"{event.info.get('stalled_s', '?')}s > deadline "
+                  f"{event.info.get('deadline_s', '?')}s); slice reclaimed",
+                  file=self.stream)
         elif kind == "RESTARTED":
             where = ("last checkpoint" if event.checkpoint is not None else "scratch")
             print(f"[tune] {trial.trial_id} failed "

@@ -167,7 +167,7 @@ class TrialRunner:
             return not self.is_finished()
 
         if event.type in (EventType.CHECKPOINTED, EventType.HEARTBEAT_MISSED,
-                          EventType.RESTARTED):
+                          EventType.RESTARTED, EventType.KILLED):
             # Observability events: no scheduler decision, just the loggers.
             self.logger.on_event(trial, event)
             return not self.is_finished()
@@ -196,6 +196,12 @@ class TrialRunner:
 
     # -- failure handling --------------------------------------------------------
     def _handle_trial_error(self, trial: Trial, error: str) -> bool:
+        if trial.status.is_finished():
+            # Stale ERROR racing a clean stop (e.g. the straggler monitor
+            # killed a worker whose final result the runner had already
+            # consumed): the trial's outcome is decided — drop it, exactly
+            # like stale RESULTs below.
+            return not self.is_finished()
         trial.num_failures = getattr(trial, "num_failures", 0) + 1
         retryable = (
             self.max_failures > 0
@@ -246,7 +252,15 @@ class TrialRunner:
                 raise RuntimeError(
                     "RESTART_WITH_CONFIG requires scheduler_state['restore_from'/'new_config']"
                 )
-            self.executor.restart_trial_with_config(trial, ckpt, new_config)
+            try:
+                self.executor.restart_trial_with_config(trial, ckpt, new_config)
+            finally:
+                # Unpin once the donor state was consumed.  A deferred restart
+                # (no capacity: executor re-queued the trial with the donor
+                # checkpoint attached) keeps the pin until the relaunch's
+                # restore actually happens (executors unpin at consumption).
+                if trial.checkpoint is not ckpt:
+                    ckpt.pinned = False
             if trial.status == TrialStatus.ERROR:
                 self._finalize_error(trial)
         else:

@@ -108,6 +108,7 @@ class PopulationBasedTraining(TrialScheduler):
         # Stage the exploit: the runner restores donor's checkpoint with the
         # explored config (paper: "restart a trial with an updated
         # hyperparameter configuration").
+        donor.checkpoint.pinned = True  # survive keep_last rotation until applied
         trial.scheduler_state["restore_from"] = donor.checkpoint
         trial.scheduler_state["new_config"] = self._explore(donor.config)
         trial.scheduler_state["cloned_from"] = donor.trial_id

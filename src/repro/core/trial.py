@@ -62,12 +62,18 @@ class Result:
 
 @dataclass
 class Checkpoint:
-    """A reference to saved trial state (object-store key or disk path)."""
+    """A reference to saved trial state (object-store key or disk path).
+
+    ``pinned`` marks a checkpoint a scheduler has staged for later use (e.g. a
+    PBT donor awaiting exploit): the CheckpointManager's ``keep_last`` rotation
+    keeps both the store entry and the disk mirror alive while it is set.
+    """
 
     trial_id: str
     training_iteration: int
     store_key: Optional[str] = None
     path: Optional[str] = None
+    pinned: bool = False
 
     @property
     def location(self) -> str:

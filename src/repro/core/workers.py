@@ -1,0 +1,375 @@
+"""Process-based trial workers — the Ray-actor analogue as real OS processes.
+
+The thread tier (concurrent_executor.py) overlaps *device* work, but host-side
+trainable code still serializes on the GIL, and a hung step can only be
+abandoned — its thread (and SlicePool slice) leak forever.  This module gives
+each trial its own **spawned process**, driven over a pipe with a small command
+protocol; because it is a process, the host can ``SIGKILL`` it and reclaim the
+slice (DESIGN.md §5).
+
+Three pieces:
+
+- ``TrainableFactory`` — a *spawn-safe* recipe for rebuilding the trainable in
+  the child: an importable ``"module:attr"`` target (optionally called with
+  args/kwargs to produce the class) plus sys.path entries.  Nothing live
+  crosses the boundary — the child re-imports and re-builds.
+  ``register_worker_factory``/``resolve_worker_factory`` is the process-tier
+  registry mirroring ``register_trainable``.
+- The command protocol — parent sends ``STEP`` / ``SAVE`` / ``RESTORE`` /
+  ``RESET_CONFIG`` / ``STOP``; the child replies ``READY`` / ``RESULT`` /
+  ``CHECKPOINTED`` / ``SAVED`` / ``RESTORED`` / ``RESET`` / ``STOPPED`` /
+  ``ERROR``.  Checkpoint **bytes** (``checkpoint.tree_to_bytes``) travel
+  through the spill surface of an ``ObjectStore`` both sides point at — only
+  keys cross the pipe, and no live JAX object is ever pickled.
+- ``ProcessWorker`` — the parent-side handle: spawn, thread-safe send, kill,
+  join.  The child is started with the ``spawn`` method (fork is unsafe once
+  JAX/XLA threads exist) and is a daemon, so a dying host reaps its workers.
+
+This module (and everything it imports) stays jax-free at import time: a
+worker whose trainable never touches device arrays boots in fractions of a
+second instead of paying the jax import.
+"""
+from __future__ import annotations
+
+import importlib
+import itertools
+import multiprocessing as mp
+import os
+import sys
+import threading
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from .object_store import ObjectStore
+
+__all__ = [
+    "TrainableFactory", "register_worker_factory", "resolve_worker_factory",
+    "factory_from_class", "ProcessWorker",
+    "CMD_STEP", "CMD_SAVE", "CMD_RESTORE", "CMD_RESET_CONFIG", "CMD_STOP",
+]
+
+# parent -> child commands
+CMD_STEP = "STEP"
+CMD_SAVE = "SAVE"
+CMD_RESTORE = "RESTORE"
+CMD_RESET_CONFIG = "RESET_CONFIG"
+CMD_STOP = "STOP"
+
+# child -> parent messages
+MSG_READY = "READY"
+MSG_RESULT = "RESULT"
+MSG_CHECKPOINTED = "CHECKPOINTED"
+MSG_SAVED = "SAVED"
+MSG_RESTORED = "RESTORED"
+MSG_RESET = "RESET"
+MSG_STOPPED = "STOPPED"
+MSG_ERROR = "ERROR"
+
+
+@dataclass(frozen=True)
+class TrainableFactory:
+    """Spawn-safe recipe for building a trainable class in a worker process.
+
+    ``target`` is ``"module:attr"`` (dots allowed in ``attr``).  With
+    ``call=True`` the imported attr is called with ``args``/``kwargs`` and must
+    return the Trainable class (the ``make_model_trainable`` pattern);
+    otherwise the attr *is* the class.  ``sys_path`` entries are prepended in
+    the child before the import — how test-local and script-local trainables
+    become importable from a fresh interpreter.
+    """
+
+    target: str
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    call: bool = False
+    sys_path: Tuple[str, ...] = ()
+
+    def resolve(self) -> type:
+        for p in reversed(self.sys_path):
+            if p and p not in sys.path:
+                sys.path.insert(0, p)
+        mod_name, _, attr = self.target.partition(":")
+        if not attr:
+            raise ValueError(f"factory target must be 'module:attr', got {self.target!r}")
+        obj: Any = importlib.import_module(mod_name)
+        for part in attr.split("."):
+            obj = getattr(obj, part)
+        if self.call:
+            obj = obj(*self.args, **dict(self.kwargs))
+        return obj
+
+
+_WORKER_REGISTRY: Dict[str, TrainableFactory] = {}
+
+
+def register_worker_factory(name: str, factory: TrainableFactory) -> None:
+    """Register a spawn-safe factory under ``name`` (the process-tier analogue
+    of ``register_trainable``)."""
+    if not isinstance(factory, TrainableFactory):
+        raise TypeError(f"expected a TrainableFactory, got {type(factory)}")
+    _WORKER_REGISTRY[name] = factory
+
+
+def resolve_worker_factory(name: str) -> TrainableFactory:
+    try:
+        return _WORKER_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no worker factory registered for trainable {name!r}; process "
+            "workers rebuild the trainable in a fresh interpreter, so register "
+            "a spawn-safe recipe with register_worker_factory(name, "
+            "TrainableFactory(...)) (for model trainables use "
+            "train.trainable.model_trainable_factory)")
+
+
+def factory_from_class(cls: type) -> Optional[TrainableFactory]:
+    """A factory referencing ``cls`` by import path, or None when the class is
+    not importable from a fresh interpreter (local classes, ``wrap_function``
+    products — those need an explicit factory)."""
+    qualname = getattr(cls, "__qualname__", "")
+    module = getattr(cls, "__module__", "")
+    if not module or not qualname or "<locals>" in qualname or module == "__main__":
+        return None
+    return TrainableFactory(target=f"{module}:{qualname}")
+
+
+# ---------------------------------------------------------------------------------
+# child side
+# ---------------------------------------------------------------------------------
+
+def _child_store(spec: Dict[str, Any]) -> ObjectStore:
+    # Tiny in-memory footprint: the child's store exists only as a window onto
+    # the shared spill directory; checkpoint bytes go straight to disk.
+    return ObjectStore(capacity_bytes=1 << 20, spill_dir=spec["spill_dir"])
+
+
+def _decode_state(state: Any) -> Any:
+    if isinstance(state, (bytes, bytearray)):
+        from .checkpoint import tree_from_bytes
+        return tree_from_bytes(bytes(state))
+    return state  # a live pytree put there by an in-host executor
+
+
+def _consume_key(store: ObjectStore, key: str) -> None:
+    """Private export-copy payloads (CheckpointManager.export_copy) are
+    one-shot: delete after a successful restore so spill files don't pile up.
+    Shared keys (a trial's own checkpoints) are left alone."""
+    if key.startswith("export/"):
+        try:
+            store.delete(key)
+        except OSError:
+            pass
+
+
+def _child_main(conn, spec: Dict[str, Any]) -> None:
+    """Worker process entry: build the trainable, then serve the command loop.
+
+    Every reply is sent before blocking on the next command, and the child
+    never has more than one un-consumed RESULT outstanding — the parent's
+    resume gate is simply "don't send STEP yet".
+    """
+    trial_id = spec["trial_id"]
+    checkpoint_freq = int(spec.get("checkpoint_freq", 0))
+    try:
+        nice = int(spec.get("nice", 0))
+        if nice > 0 and hasattr(os, "nice"):
+            # Data-plane yields to control-plane: trial compute saturates the
+            # cores, but the host's pump/runner threads must preempt instantly
+            # to turn a RESULT into the next STEP, or every worker idles at
+            # the gate for an OS scheduling quantum per step.
+            os.nice(nice)
+        store = _child_store(spec)
+        cls = spec["factory"].resolve()
+        trainable = cls(dict(spec["config"]))
+        restore_key = spec.get("restore_key")
+        if restore_key:
+            trainable.restore(_decode_state(store.get(restore_key)))
+            trainable.iteration = int(spec.get("restore_iteration", 0))
+            _consume_key(store, restore_key)
+        conn.send((MSG_READY, os.getpid()))
+    except BaseException:  # noqa: BLE001 — report the build failure, then exit
+        try:
+            conn.send((MSG_ERROR, traceback.format_exc()))
+        except (BrokenPipeError, OSError):
+            pass
+        return
+
+    save_seq = itertools.count()
+
+    def _save_bytes() -> str:
+        from .checkpoint import tree_to_bytes
+        data = tree_to_bytes(trainable.save())
+        # Key is unique per save, not just per iteration: a PBT rewind makes a
+        # worker re-reach the same iteration and save again, and reusing the
+        # key would let the host's LRU serve the stale first payload (and let
+        # keep_last rotation of the old Checkpoint delete the new one's data).
+        key = f"ckpt/{trial_id}/{trainable.iteration}.{os.getpid()}.{next(save_seq)}"
+        return store.put_spilled(data, key=key)
+
+    try:
+        while True:
+            msg = conn.recv()
+            cmd = msg[0]
+            if cmd == CMD_STEP:
+                try:
+                    metrics = dict(trainable.train())
+                    done = bool(metrics.pop("done", False))
+                    if (checkpoint_freq and not done
+                            and trainable.iteration % checkpoint_freq == 0):
+                        conn.send((MSG_CHECKPOINTED, _save_bytes(), trainable.iteration))
+                except Exception:  # noqa: BLE001 — trial error, not framework error
+                    conn.send((MSG_ERROR, traceback.format_exc()))
+                    return
+                conn.send((MSG_RESULT, trainable.iteration, metrics, done))
+            elif cmd == CMD_SAVE:
+                try:
+                    conn.send((MSG_SAVED, _save_bytes(), trainable.iteration))
+                except Exception:  # noqa: BLE001
+                    conn.send((MSG_ERROR, traceback.format_exc()))
+                    return
+            elif cmd == CMD_RESTORE:
+                _, key, iteration = msg
+                try:
+                    trainable.restore(_decode_state(store.get(key)))
+                    trainable.iteration = int(iteration)
+                    _consume_key(store, key)
+                    conn.send((MSG_RESTORED, int(iteration)))
+                except Exception:  # noqa: BLE001
+                    conn.send((MSG_ERROR, traceback.format_exc()))
+                    return
+            elif cmd == CMD_RESET_CONFIG:
+                _, new_config = msg
+                try:
+                    ok = bool(trainable.reset_config(dict(new_config)))
+                    if ok:
+                        trainable.config = dict(new_config)
+                except Exception:  # noqa: BLE001
+                    conn.send((MSG_ERROR, traceback.format_exc()))
+                    return
+                conn.send((MSG_RESET, ok))
+            elif cmd == CMD_STOP:
+                try:
+                    trainable.cleanup()
+                except Exception:  # noqa: BLE001
+                    pass
+                conn.send((MSG_STOPPED,))
+                return
+            else:
+                conn.send((MSG_ERROR, f"unknown worker command {cmd!r}"))
+                return
+    except (EOFError, KeyboardInterrupt, BrokenPipeError, OSError):
+        # parent vanished or killed us mid-send; nothing left to report to
+        return
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------------
+# parent side
+# ---------------------------------------------------------------------------------
+
+_DEFAULT_CTX: Optional[Any] = None
+
+
+def _default_context():
+    """The cheapest safe multiprocessing context on this platform.
+
+    Preferred: ``forkserver`` with this module preloaded — the server process
+    imports repro.core once, then every worker is a ~tens-of-ms fork of that
+    warm, thread-free image (fork is safe there: the server never starts JAX
+    or any thread).  Plain ``fork`` from the *host* is NOT safe — the host has
+    JAX/XLA and executor threads — and plain ``spawn`` re-imports the host's
+    ``__main__`` plus the whole stack in every single worker (~1-2s per
+    trial).  Falls back to ``spawn`` where forkserver is unavailable.
+    """
+    global _DEFAULT_CTX
+    if _DEFAULT_CTX is None:
+        try:
+            ctx = mp.get_context("forkserver")
+            ctx.set_forkserver_preload(["repro.core.workers"])
+            _DEFAULT_CTX = ctx
+        except ValueError:  # platform without forkserver
+            _DEFAULT_CTX = mp.get_context("spawn")
+    return _DEFAULT_CTX
+
+
+class ProcessWorker:
+    """Parent-side handle on one spawned trial worker.
+
+    ``send`` is thread-safe (the executor's pump thread kicks READY workers
+    while the runner thread drives lifecycle commands).  ``kill`` is the
+    reclamation path the thread tier cannot offer: SIGKILL, join, done —
+    whatever the child was stuck in, its slice is free again.
+    """
+
+    def __init__(
+        self,
+        factory: TrainableFactory,
+        trial_id: str,
+        config: Dict[str, Any],
+        spill_dir: str,
+        checkpoint_freq: int = 0,
+        restore_key: Optional[str] = None,
+        restore_iteration: int = 0,
+        mp_context: Optional[str] = None,
+        nice: int = 1,
+    ):
+        spec = {
+            "factory": factory,
+            "trial_id": trial_id,
+            "config": config,
+            "spill_dir": spill_dir,
+            "checkpoint_freq": checkpoint_freq,
+            "restore_key": restore_key,
+            "restore_iteration": restore_iteration,
+            "nice": nice,
+        }
+        ctx = mp.get_context(mp_context) if mp_context else _default_context()
+        self.conn, child_conn = ctx.Pipe(duplex=True)
+        self.process = ctx.Process(
+            target=_child_main, args=(child_conn, spec),
+            name=f"repro-worker-{trial_id}", daemon=True)
+        self._send_lock = threading.Lock()
+        self.process.start()
+        child_conn.close()  # child end belongs to the child now
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.process.pid
+
+    def alive(self) -> bool:
+        return self.process.is_alive()
+
+    def send(self, *msg: Any) -> bool:
+        """Best-effort command send; False when the pipe is already dead."""
+        try:
+            with self._send_lock:
+                self.conn.send(msg)
+            return True
+        except (BrokenPipeError, OSError, ValueError):
+            return False
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        self.process.join(timeout=timeout)
+        return not self.process.is_alive()
+
+    def kill(self, join_timeout: float = 5.0) -> None:
+        """SIGKILL the worker and reap it.  Unlike an abandoned thread, this
+        *reclaims* the straggler: the process is gone, so its sub-mesh can be
+        handed to another trial immediately."""
+        try:
+            self.process.kill()
+        except (OSError, AttributeError, ValueError):
+            pass
+        self.process.join(timeout=join_timeout)
+        self.close()
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass

@@ -8,8 +8,11 @@ the six built-in schedulers, optionally driven by a searcher (TPE/random),
 with trials placed on mesh slices via the SlicePool.  ``--executor`` picks the
 execution tier: ``serial`` (host time-slicing), ``concurrent`` (one worker
 thread per trial, overlapped JAX dispatch across disjoint slices, heartbeat
-straggler detection), or ``vmap`` (homogeneous sweeps as one SPMD program).
-``--max-failures`` restarts a crashed trial from its last checkpoint.
+straggler detection), ``process`` (one spawned worker *process* per trial —
+GIL-free host stepping, checkpoint bytes over the ObjectStore spill surface,
+and kill-on-straggle reclamation after ``--straggler-deadline`` seconds), or
+``vmap`` (homogeneous sweeps as one SPMD program).  ``--max-failures``
+restarts a crashed trial from its last checkpoint.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ from ..core import (ASHAScheduler, FIFOScheduler, GPSearcher,
                     PopulationBasedTraining, Resources, TPESearcher,
                     RandomSearcher, loguniform, run_experiments, uniform)
 from ..dist.submesh import SlicePool
-from ..train.trainable import make_model_trainable
+from ..train.trainable import make_model_trainable, model_trainable_factory
 
 
 def build_vmap_executor(cfg, args):
@@ -101,7 +104,7 @@ def main() -> None:
     ap.add_argument("--devices-per-trial", type=int, default=8)
     ap.add_argument("--total-devices", type=int, default=256)
     ap.add_argument("--executor", default="serial",
-                    choices=["serial", "concurrent", "vmap"])
+                    choices=["serial", "concurrent", "process", "vmap"])
     ap.add_argument("--max-failures", type=int, default=0,
                     help="restart a crashed trial from its last checkpoint up "
                          "to N times before marking it ERROR")
@@ -109,8 +112,13 @@ def main() -> None:
                     help="abort the experiment once more than N trials errored "
                          "(0 = never)")
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
-                    help="concurrent executor: seconds before a stalled step "
-                         "emits HEARTBEAT_MISSED")
+                    help="concurrent/process executors: seconds before a "
+                         "stalled step emits HEARTBEAT_MISSED")
+    ap.add_argument("--straggler-deadline", type=float, default=300.0,
+                    help="process executor: hard per-step deadline after which "
+                         "a straggling worker is SIGKILLed, its slice returned "
+                         "to the pool, and the trial requeued from its last "
+                         "checkpoint under --max-failures (0 disables)")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -118,10 +126,15 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    trainable = make_model_trainable(
-        cfg, batch=args.batch, seq_len=args.seq_len,
-        steps_per_iter=args.steps_per_iter,
-        total_steps=args.max_iters * args.steps_per_iter)
+    workload = dict(batch=args.batch, seq_len=args.seq_len,
+                    steps_per_iter=args.steps_per_iter,
+                    total_steps=args.max_iters * args.steps_per_iter)
+    if args.executor == "process":
+        # Spawn-safe recipe: worker processes rebuild the bound trainable by
+        # re-importing make_model_trainable in the child.
+        trainable = model_trainable_factory(cfg, **workload)
+    else:
+        trainable = make_model_trainable(cfg, **workload)
 
     space = {"lr": loguniform(1e-4, 1e-1), "warmup": 5,
              "weight_decay": uniform(0.0, 0.2)}
@@ -156,6 +169,7 @@ def main() -> None:
         max_failures=args.max_failures,
         max_experiment_failures=args.max_experiment_failures,
         heartbeat_timeout=args.heartbeat_timeout,
+        straggler_deadline=args.straggler_deadline,
         log_dir=args.log_dir,
         verbose=True,
         seed=args.seed,

@@ -1,0 +1,152 @@
+"""Spawn-safe trainables for the process-worker tests.
+
+Worker processes rebuild their trainable from an importable ``module:attr``
+target (tests pass ``sys_path=(this dir,)`` in the TrainableFactory), so the
+classes the process-executor tests drive must live in a real module — a class
+defined inside a test function can never cross the spawn boundary.
+
+Cross-process side-channels (did-I-crash-already markers) are files under a
+config-supplied directory: class attributes don't survive into a fresh
+interpreter, which is precisely the difference between this tier and the
+thread tier.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.api import Trainable
+
+__all__ = ["Counter", "LrCounter", "CrashOnce", "HangOnce", "Sleeper",
+           "train_fn", "make_function_trainable"]
+
+
+def train_fn(tune):
+    """Cooperative function-based trainable (paper Figure 2a)."""
+    x = 0.0
+    for _ in range(3):
+        x += tune.params.get("inc", 1.0)
+        tune.report(value=x)
+
+
+def make_function_trainable():
+    """Call-factory target: rebuilds the wrap_function adapter in the child."""
+    from repro.core.api import wrap_function
+
+    return wrap_function(train_fn)
+
+
+class Counter(Trainable):
+    """Deterministic arithmetic: loss = 1/n, state = n."""
+
+    def setup(self, config):
+        self.n = 0
+        self.inc = int(config.get("inc", 1))
+
+    def step(self):
+        self.n += self.inc
+        return {"loss": 1.0 / self.n, "n": self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+    def reset_config(self, new_config):
+        self.inc = int(new_config.get("inc", self.inc))
+        return True
+
+
+class LrCounter(Trainable):
+    """lr-separable loss (drives every scheduler); mirrors the thread-tier
+    fixture in test_concurrent_executor.py."""
+
+    def setup(self, config):
+        self.n = 0
+        self.lr = float(config.get("lr", 0.01))
+
+    def step(self):
+        self.n += 1
+        return {"loss": (self.lr - 0.01) ** 2 + 1.0 / self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+    def reset_config(self, new_config):
+        self.lr = float(new_config.get("lr", self.lr))
+        self.config = dict(new_config)
+        return True
+
+
+class CrashOnce(Trainable):
+    """Raises at iteration ``fail_at`` on the first incarnation only (a marker
+    file under ``marker_dir`` records that the crash already happened)."""
+
+    def setup(self, config):
+        self.n = 0
+        self.fail_at = int(config.get("fail_at", 3))
+        self.marker = os.path.join(config["marker_dir"], "crashed.marker")
+
+    def step(self):
+        self.n += 1
+        if self.n == self.fail_at and not os.path.exists(self.marker):
+            with open(self.marker, "w") as f:
+                f.write("crashed")
+            raise RuntimeError("injected failure (process tier)")
+        return {"loss": 1.0 / self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+
+class HangOnce(Trainable):
+    """Hangs (sleeps ~forever) at iteration ``hang_at`` on the first
+    incarnation only — the kill-on-straggle fixture: the monitor must SIGKILL
+    it, and the restarted worker (marker present) runs clean from the last
+    checkpoint."""
+
+    def setup(self, config):
+        self.n = 0
+        self.hang_at = int(config.get("hang_at", 3))
+        self.hang_s = float(config.get("hang_s", 120.0))
+        self.marker = os.path.join(config["marker_dir"], "hung.marker")
+
+    def step(self):
+        self.n += 1
+        if self.n == self.hang_at and not os.path.exists(self.marker):
+            with open(self.marker, "w") as f:
+                f.write("hanging")
+            time.sleep(self.hang_s)  # SIGKILL arrives mid-sleep
+        return {"loss": 1.0 / self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+
+class Sleeper(Trainable):
+    """Fixed-length steps (slice-holding sleep), for pause/kill timing tests."""
+
+    def setup(self, config):
+        self.n = 0
+        self.sleep_s = float(config.get("sleep_s", 0.05))
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+    def step(self):
+        time.sleep(self.sleep_s)
+        self.n += 1
+        return {"loss": 1.0 / self.n}

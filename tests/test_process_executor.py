@@ -1,0 +1,298 @@
+"""ProcessMeshExecutor: scheduler matrix vs the serial executor, crash
+recovery across real process boundaries, and the kill-on-straggle state
+machine (SIGKILL mid-step -> slice reclaimed -> requeue-from-checkpoint)."""
+import os
+import signal
+import time
+
+import pytest
+
+from repro.core import (ASHAScheduler, CheckpointManager, EventType,
+                        FIFOScheduler, HyperBandScheduler, Logger, ObjectStore,
+                        PopulationBasedTraining, ProcessMeshExecutor, Resources,
+                        TrainableFactory, Trial, TrialRunner, TrialStatus,
+                        grid_search, loguniform, register_worker_factory,
+                        run_experiments)
+from repro.dist.submesh import SlicePool
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def factory(name: str) -> TrainableFactory:
+    return TrainableFactory(target=f"_worker_trainables:{name}",
+                            sys_path=(TESTS_DIR,))
+
+
+def make_executor(name: str, devices=8, checkpoint_freq=1, **kw):
+    return ProcessMeshExecutor(
+        factory_resolver=lambda _n: factory(name),
+        checkpoint_manager=CheckpointManager(ObjectStore()),
+        total_devices=devices, checkpoint_freq=checkpoint_freq, **kw)
+
+
+class Recorder(Logger):
+    def __init__(self):
+        self.events = []
+
+    def on_event(self, trial, event):
+        self.events.append(event)
+
+    def of(self, kind):
+        return [e for e in self.events if e.type == kind]
+
+
+SCHEDULERS = {
+    "fifo": lambda: FIFOScheduler(metric="loss", mode="min"),
+    "asha": lambda: ASHAScheduler(metric="loss", mode="min", max_t=6,
+                                  grace_period=2, reduction_factor=2),
+    "hyperband": lambda: HyperBandScheduler(metric="loss", mode="min",
+                                            max_t=4, eta=2),
+    "pbt": lambda: PopulationBasedTraining(
+        metric="loss", mode="min", perturbation_interval=2,
+        hyperparam_mutations={"lr": loguniform(1e-4, 1e-1)}, seed=0),
+}
+
+
+@pytest.mark.timeout(600)
+class TestSchedulerMatrix:
+    """The existing scheduler matrix, on worker processes."""
+
+    @pytest.mark.parametrize("name", list(SCHEDULERS))
+    def test_scheduler_on_process_executor(self, name):
+        from _worker_trainables import LrCounter
+
+        register_worker_factory("LrCounter", factory("LrCounter"))
+        an = run_experiments(
+            LrCounter,
+            {"lr": loguniform(1e-3, 1e-1)},
+            scheduler=SCHEDULERS[name](),
+            num_samples=4,
+            stop={"training_iteration": 6},
+            total_devices=4,
+            checkpoint_freq=1,
+            executor="process",
+            seed=0,
+        )
+        assert an.best_value() is not None
+        finished = [t for t in an.trials if t.status == TrialStatus.TERMINATED]
+        assert finished, f"{name}: no trial finished"
+        for t in an.trials:  # per-trial results arrive strictly in order
+            iters = [r.training_iteration for r in t.results]
+            assert iters == sorted(iters), (name, t.trial_id, iters)
+
+    def test_fifo_results_match_serial_executor(self):
+        """Deterministic trainable + FIFO: the process tier must reproduce the
+        serial tier's result stream exactly (same losses at same iterations)."""
+        from _worker_trainables import LrCounter
+
+        def sweep(executor):
+            register_worker_factory("LrCounter", factory("LrCounter"))
+            return run_experiments(
+                LrCounter,
+                {"lr": grid_search([0.005, 0.02, 0.08])},  # same trials both runs
+                scheduler=FIFOScheduler(metric="loss", mode="min"),
+                stop={"training_iteration": 5},
+                total_devices=4,
+                checkpoint_freq=1,
+                executor=executor,
+                seed=0,
+            )
+
+        serial, process = sweep("serial"), sweep("process")
+        assert serial.best_value() == pytest.approx(process.best_value())
+        s_by_cfg = {t.config["lr"]: t for t in serial.trials}
+        for t in process.trials:
+            ref = s_by_cfg[t.config["lr"]]
+            assert t.status == ref.status == TrialStatus.TERMINATED
+            assert ([r.training_iteration for r in t.results]
+                    == [r.training_iteration for r in ref.results])
+            for mine, theirs in zip(t.results, ref.results):
+                assert mine.metrics["loss"] == pytest.approx(theirs.metrics["loss"])
+
+
+@pytest.mark.timeout(600)
+class TestFaultTolerance:
+    def test_child_crash_restarts_from_checkpoint(self, tmp_path):
+        """A worker that raises at iteration 3 is rebuilt in a fresh process
+        and resumes from the iteration-2 checkpoint (no recomputation drift)."""
+        rec = Recorder()
+        ex = make_executor("CrashOnce")
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             logger=rec,
+                             stopping_criteria={"training_iteration": 5},
+                             max_failures=1)
+        trial = Trial({"fail_at": 3, "marker_dir": str(tmp_path)},
+                      stopping_criteria={"training_iteration": 5})
+        runner.add_trial(trial)
+        runner.run()
+        assert trial.status == TrialStatus.TERMINATED
+        assert trial.num_failures == 1 and runner.n_restarts == 1
+        assert len(rec.of(EventType.RESTARTED)) == 1
+        assert [r.training_iteration for r in trial.results] == [1, 2, 3, 4, 5]
+        assert trial.results[-1].metrics["loss"] == pytest.approx(1 / 5)
+
+    def test_worker_sigkilled_externally_is_restarted(self, tmp_path):
+        """Hard SIGKILL from outside (OOM-killer analogue): the pump sees the
+        dead pipe, publishes ERROR, and max_failures restarts the trial from
+        its last checkpoint."""
+        rec = Recorder()
+        ex = make_executor("Sleeper", devices=2)
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             logger=rec,
+                             stopping_criteria={"training_iteration": 6},
+                             max_failures=1)
+        trial = Trial({"sleep_s": 0.2}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 6})
+        runner.add_trial(trial)
+        # drive until a couple of checkpoints exist, then murder the worker
+        deadline = time.time() + 120
+        while trial.training_iteration < 2 and time.time() < deadline:
+            runner.step()
+        pid = ex.worker_pid(trial.trial_id)
+        assert pid is not None
+        os.kill(pid, signal.SIGKILL)
+        runner.run()
+        assert trial.status == TrialStatus.TERMINATED
+        assert trial.training_iteration == 6
+        assert trial.num_failures == 1
+        assert len(rec.of(EventType.RESTARTED)) == 1
+        assert [r.training_iteration for r in trial.results] == [1, 2, 3, 4, 5, 6]
+
+
+@pytest.mark.timeout(600)
+class TestKillOnStraggle:
+    def test_straggler_killed_slice_reacquired_same_step(self, tmp_path):
+        """The acceptance scenario: trial A hangs mid-step holding the only
+        slice; the monitor SIGKILLs it after the deadline; PENDING trial B
+        acquires the freed slice in the very next scheduler step; A restarts
+        from its last checkpoint and both finish."""
+        rec = Recorder()
+        pool = SlicePool(n_virtual=2)
+        ex = ProcessMeshExecutor(
+            factory_resolver=lambda name: factory(name),
+            checkpoint_manager=CheckpointManager(ObjectStore()),
+            total_devices=2, slice_pool=pool, checkpoint_freq=1,
+            heartbeat_timeout=0.3, straggler_deadline=1.0)
+        runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), ex,
+                             logger=rec,
+                             stopping_criteria={"training_iteration": 4},
+                             max_failures=1)
+        hang = Trial({"hang_at": 3, "marker_dir": str(tmp_path)},
+                     trainable_name="HangOnce",
+                     resources=Resources(devices=2),
+                     stopping_criteria={"training_iteration": 4})
+        pending = Trial({"inc": 1}, trainable_name="Counter",
+                        resources=Resources(devices=2),
+                        stopping_criteria={"training_iteration": 4})
+        runner.add_trial(hang)
+        runner.add_trial(pending)
+
+        # Step the runner manually so we can observe the handoff precisely.
+        deadline = time.time() + 180
+        killed_seen = False
+        while time.time() < deadline:
+            more = runner.step()
+            if not killed_seen and rec.of(EventType.KILLED):
+                killed_seen = True
+            if killed_seen and pending.status in (TrialStatus.RUNNING,
+                                                  TrialStatus.TERMINATED):
+                break
+            if not more:
+                break
+        # The straggler was SIGKILLed and its slice went to the pending trial
+        # within one scheduler step of the kill being processed.
+        assert rec.of(EventType.KILLED), "monitor never killed the straggler"
+        assert ex.n_killed == 1
+        assert pending.status in (TrialStatus.RUNNING, TrialStatus.TERMINATED)
+        assert hang.status in (TrialStatus.PAUSED, TrialStatus.PENDING,
+                               TrialStatus.RUNNING, TrialStatus.TERMINATED)
+
+        runner.run()
+        # Straggle-heartbeats preceded the kill; the trial restarted from the
+        # iteration-2 checkpoint and completed.
+        assert rec.of(EventType.HEARTBEAT_MISSED)
+        assert len(rec.of(EventType.RESTARTED)) == 1
+        assert hang.status == TrialStatus.TERMINATED
+        assert hang.num_failures == 1
+        assert [r.training_iteration for r in hang.results] == [1, 2, 3, 4]
+        assert pending.status == TrialStatus.TERMINATED
+        assert pool.n_free == 2  # everything returned to the pool
+
+    def test_executor_level_slice_release_on_requeue(self, tmp_path):
+        """After KILLED+ERROR, requeue_trial releases the slice immediately —
+        has_resources flips before any relaunch."""
+        pool = SlicePool(n_virtual=2)
+        ex = ProcessMeshExecutor(
+            factory_resolver=lambda name: factory("Sleeper"),
+            checkpoint_manager=CheckpointManager(ObjectStore()),
+            total_devices=2, slice_pool=pool, checkpoint_freq=0,
+            heartbeat_timeout=0.0, straggler_deadline=0.8)
+        stuck = Trial({"sleep_s": 60.0}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 3})
+        other = Trial({"sleep_s": 0.01}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 1})
+        try:
+            assert ex.start_trial(stuck)
+            assert not ex.has_resources(other)
+            seen = set()
+            deadline = time.time() + 120
+            while time.time() < deadline and EventType.ERROR not in seen:
+                ev = ex.get_next_event(timeout=2.0)
+                if ev is not None:
+                    seen.add(ev.type)
+            assert EventType.KILLED in seen and EventType.ERROR in seen
+            ex.requeue_trial(stuck)
+            assert stuck.status == TrialStatus.PENDING  # no checkpoint yet
+            assert ex.has_resources(other)              # slice is back
+            assert ex.start_trial(other)
+            ev = ex.get_next_event(timeout=60.0)
+            assert ev is not None and ev.type == EventType.RESULT
+            assert ev.trial_id == other.trial_id
+        finally:
+            ex.shutdown()
+
+
+def _next_result(ex, timeout=60.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        ev = ex.get_next_event(timeout=deadline - time.time())
+        if ev is not None and ev.type == EventType.RESULT:
+            return ev
+    raise AssertionError("no RESULT event in time")
+
+
+@pytest.mark.timeout(600)
+class TestProcessPBTRestart:
+    def test_restart_with_config_in_place(self, tmp_path):
+        """RESET_CONFIG + RESTORE without tearing the process down."""
+        ex = make_executor("Counter", devices=4)
+        trial = Trial({"inc": 1}, resources=Resources(devices=2))
+        try:
+            assert ex.start_trial(trial)
+            _next_result(ex)
+            ckpt = ex.save_checkpoint(trial)
+            pid_before = ex.worker_pid(trial.trial_id)
+            ex.restart_trial_with_config(trial, ckpt, {"inc": 5})
+            assert ex.worker_pid(trial.trial_id) == pid_before  # same process
+            ev = _next_result(ex)
+            # restored n=1 then stepped with inc=5
+            assert ev.result.metrics["n"] == 6
+        finally:
+            ex.shutdown()
+
+    def test_function_trainable_via_factory(self):
+        """Cooperative function trainables work inside a worker process (the
+        wrap_function adapter is rebuilt in the child via a call-factory)."""
+        fac = TrainableFactory(target="_worker_trainables:make_function_trainable",
+                               call=True, sys_path=(TESTS_DIR,))
+        ex = ProcessMeshExecutor(
+            factory_resolver=lambda name: fac,
+            checkpoint_manager=CheckpointManager(ObjectStore()),
+            total_devices=4, checkpoint_freq=0)
+        runner = TrialRunner(FIFOScheduler(metric="value", mode="max"), ex)
+        t1 = Trial({"inc": 2.0})
+        runner.add_trial(t1)
+        runner.run()
+        assert t1.status == TrialStatus.TERMINATED
+        vals = [r.metrics["value"] for r in t1.results if "value" in r.metrics]
+        assert vals == [2.0, 4.0, 6.0]

@@ -1,0 +1,323 @@
+"""Unit coverage for the process-worker substrate (DESIGN.md §5 satellites):
+ObjectStore thread/process-host safety + spill re-admission, CheckpointManager
+mirror rotation/pinning/adoption, narrow-dtype checkpoint bytes, spawn-safe
+factories, and the raw ProcessWorker command protocol."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, ObjectStore, TrainableFactory,
+                        factory_from_class, tree_from_bytes, tree_to_bytes)
+from repro.core.workers import ProcessWorker
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+COUNTER_FACTORY = TrainableFactory(target="_worker_trainables:Counter",
+                                   sys_path=(TESTS_DIR,))
+
+
+# ---------------------------------------------------------------------------------
+# ObjectStore: lock safety + spill surface
+# ---------------------------------------------------------------------------------
+
+class TestObjectStoreConcurrency:
+    def test_hammer_from_threads(self, tmp_path):
+        store = ObjectStore(capacity_bytes=20_000, spill_dir=str(tmp_path))
+        errors = []
+
+        def worker(tid):
+            try:
+                for i in range(200):
+                    key = f"t{tid}/obj{i % 7}"
+                    store.put(np.arange(64) + tid, key=key)
+                    assert store.get(key).shape == (64,)
+                    if i % 5 == 0:
+                        store.delete(key)
+                    store.contains(key)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+
+    def test_get_readmits_spilled_entry(self, tmp_path):
+        store = ObjectStore(capacity_bytes=300, spill_dir=str(tmp_path))
+        a = store.put(np.arange(32, dtype=np.float64))  # 256B
+        b = store.put(np.arange(32, dtype=np.float64))  # evicts a to disk
+        assert store.n_evicted == 1
+        assert a not in store._mem and store.contains(a)
+        got = store.get(a)  # disk read -> re-admitted into the LRU
+        assert a in store._mem
+        np.testing.assert_array_equal(got, np.arange(32, dtype=np.float64))
+        # second get is a pure memory hit (b was evicted to make room)
+        assert store.get(a) is not None and b not in store._mem
+
+    def test_put_spilled_and_export_cross_store(self, tmp_path):
+        """Two stores sharing a spill dir see each other's spilled entries —
+        the process-IPC surface."""
+        producer = ObjectStore(spill_dir=str(tmp_path))
+        consumer = ObjectStore(spill_dir=str(tmp_path))
+        key = producer.put_spilled(b"checkpoint-bytes", key="ckpt/t/1")
+        assert consumer.contains(key)
+        assert consumer.get(key) == b"checkpoint-bytes"
+        # export: force a memory-resident entry onto the shared surface
+        k2 = producer.put({"x": 1}, key="obj/x")
+        path = producer.export(k2)
+        assert os.path.exists(path)
+        assert consumer.get(k2) == {"x": 1}
+
+    def test_peek_does_not_readmit(self, tmp_path):
+        store = ObjectStore(capacity_bytes=300, spill_dir=str(tmp_path))
+        a = store.put(np.arange(32, dtype=np.float64))
+        store.put(np.arange(32, dtype=np.float64))  # evicts a to disk
+        assert a not in store._mem
+        np.testing.assert_array_equal(store.peek(a),
+                                      np.arange(32, dtype=np.float64))
+        assert a not in store._mem  # one-shot read: no cache, no LRU churn
+
+    def test_no_spill_dir_still_refuses_eviction(self):
+        store = ObjectStore(capacity_bytes=300)
+        store.put(np.arange(32, dtype=np.float64))
+        with pytest.raises(RuntimeError, match="spill_dir"):
+            store.put(np.arange(32, dtype=np.float64))
+
+
+# ---------------------------------------------------------------------------------
+# Checkpoint codec: narrow dtypes are a hard requirement for the bytes path
+# ---------------------------------------------------------------------------------
+
+class TestCheckpointDtypes:
+    @pytest.mark.parametrize("dtype", ["float16", "bfloat16", "float32", "int8",
+                                       "uint32", "bool"])
+    def test_numpy_roundtrip(self, dtype):
+        import ml_dtypes
+        dt = np.dtype(dtype) if dtype != "bfloat16" else np.dtype(ml_dtypes.bfloat16)
+        x = np.arange(12).reshape(3, 4).astype(dt)
+        out = tree_from_bytes(tree_to_bytes({"x": x, "nested": [x, (x,)]}))
+        assert out["x"].dtype == dt
+        np.testing.assert_array_equal(out["x"].astype(np.float64),
+                                      x.astype(np.float64))
+
+    @pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+    def test_jax_array_roundtrip(self, dtype):
+        import jax.numpy as jnp
+        x = jnp.linspace(0, 1, 8, dtype=dtype)
+        out = tree_from_bytes(tree_to_bytes({"w": x}))
+        assert str(out["w"].dtype) == dtype
+        np.testing.assert_allclose(out["w"].astype(np.float32),
+                                   np.asarray(x, dtype=np.float32))
+
+    def test_scalars_and_structure(self):
+        tree = {"a": 1, "b": 2.5, "c": None, "d": "s", "e": True,
+                "f": [1, (2, 3)], "g": np.float32(7)}
+        out = tree_from_bytes(tree_to_bytes(tree))
+        assert out["f"] == [1, (2, 3)] and out["g"] == 7.0
+
+    def test_crc_detects_corruption(self):
+        data = bytearray(tree_to_bytes({"x": np.arange(4)}))
+        data[10] ^= 0xFF
+        with pytest.raises(IOError, match="CRC"):
+            tree_from_bytes(bytes(data))
+
+
+# ---------------------------------------------------------------------------------
+# CheckpointManager: rotation deletes mirrors, pinning, adopt/export
+# ---------------------------------------------------------------------------------
+
+def _mgr(tmp_path, **kw):
+    store = ObjectStore(spill_dir=str(tmp_path / "spill"))
+    return CheckpointManager(store, dir=str(tmp_path / "ckpt"), **kw)
+
+
+class TestCheckpointManager:
+    def test_rotation_deletes_store_and_mirror(self, tmp_path):
+        mgr = _mgr(tmp_path, keep_last=2, durable=True)
+        ckpts = [mgr.save("t", i, {"n": np.asarray(i)}) for i in range(1, 5)]
+        # first two rotated out: store entry AND disk mirror gone
+        for old in ckpts[:2]:
+            assert not mgr.store.contains(old.store_key)
+            assert not os.path.exists(old.path)
+        for live in ckpts[2:]:
+            assert mgr.store.contains(live.store_key)
+            assert os.path.exists(live.path)
+        assert mgr.latest("t") is ckpts[-1]
+
+    def test_rotation_keeps_references_shared_with_live_entries(self, tmp_path):
+        """A PBT rewind re-reaches an iteration and checkpoints it again, so
+        two history entries share a store key and mirror path; rotating the
+        old entry must not destroy the live entry's data."""
+        mgr = _mgr(tmp_path, keep_last=2, durable=True)
+        mgr.save("t", 1, {"n": 1})
+        mgr.save("t", 2, {"n": 2})
+        rewound = mgr.save("t", 2, {"n": 22})  # same key/path as the iter-2 above
+        mgr.save("t", 3, {"n": 3})  # rotates the OLD iter-2 entry
+        assert mgr.store.contains(rewound.store_key)
+        assert os.path.exists(rewound.path)
+        assert mgr.restore(rewound) == {"n": 22}
+
+    def test_pinned_checkpoint_survives_rotation(self, tmp_path):
+        mgr = _mgr(tmp_path, keep_last=1, durable=True)
+        donor = mgr.save("t", 1, {"n": np.asarray(1)})
+        donor.pinned = True  # what PBT does when staging an exploit
+        later = [mgr.save("t", i, {"n": np.asarray(i)}) for i in range(2, 5)]
+        assert mgr.store.contains(donor.store_key)
+        assert os.path.exists(donor.path)
+        assert mgr.restore(donor) == {"n": np.asarray(1)}
+        # unpinned intermediates were rotated normally
+        assert not mgr.store.contains(later[0].store_key)
+
+    def test_adopt_bytes_and_restore_decodes(self, tmp_path):
+        """The process-worker path: child puts tree_to_bytes payloads on the
+        spill surface; the host adopts them and restore() yields the tree."""
+        mgr = _mgr(tmp_path, durable=True)
+        payload = tree_to_bytes({"n": np.arange(3)})
+        key = mgr.store.put_spilled(payload, key="ckpt/t/7")
+        ckpt = mgr.adopt("t", 7, key)
+        assert ckpt.training_iteration == 7
+        assert os.path.exists(ckpt.path)  # durable mirror, raw bytes
+        restored = mgr.restore(ckpt)
+        np.testing.assert_array_equal(restored["n"], np.arange(3))
+        # the mirror is load_pytree-compatible (same on-disk format)
+        from repro.core import load_pytree
+        np.testing.assert_array_equal(load_pytree(ckpt.path)["n"], np.arange(3))
+
+    def test_export_copy_from_memory_and_disk(self, tmp_path):
+        """export_copy snapshots the payload under a fresh private key — the
+        source can be rotated/rewritten without invalidating the reader."""
+        mgr = _mgr(tmp_path, durable=True)
+        ckpt = mgr.save("t", 1, {"n": np.asarray(5)})
+        key = mgr.export_copy(ckpt)
+        assert key != ckpt.store_key and key.startswith("export/")
+        other = ObjectStore(spill_dir=str(tmp_path / "spill"))
+        assert other.contains(key)
+        # even after the source is deleted, the snapshot survives
+        mgr.store.delete(ckpt.store_key)
+        assert other.contains(key)
+        # disk-only checkpoint (store lost, e.g. after restart): re-exported
+        key2 = mgr.export_copy(ckpt)
+        assert key2 != key and other.contains(key2)
+
+
+# ---------------------------------------------------------------------------------
+# Spawn-safe factories
+# ---------------------------------------------------------------------------------
+
+class TestTrainableFactory:
+    def test_resolve_target(self):
+        cls = COUNTER_FACTORY.resolve()
+        t = cls({"inc": 2})
+        assert t.train()["n"] == 2
+
+    def test_factory_from_class_importable(self):
+        from _worker_trainables import Counter
+        fac = factory_from_class(Counter)
+        assert fac is not None
+        assert fac.resolve() is Counter
+
+    def test_factory_from_class_rejects_locals(self):
+        from repro.core.api import Trainable
+
+        class Local(Trainable):
+            pass
+
+        assert factory_from_class(Local) is None
+
+    def test_callable_factory(self):
+        fac = TrainableFactory(target="repro.core.api:wrap_function",
+                               args=(_a_training_fn,), call=True)
+        cls = fac.resolve()
+        assert cls.__name__.startswith("Function[")
+
+    def test_registry_roundtrip(self):
+        from repro.core import register_worker_factory, resolve_worker_factory
+        register_worker_factory("counter-test", COUNTER_FACTORY)
+        assert resolve_worker_factory("counter-test") is COUNTER_FACTORY
+        with pytest.raises(KeyError, match="register_worker_factory"):
+            resolve_worker_factory("nope-not-registered")
+
+
+def _a_training_fn(tune):  # module-level: picklable for the factory test
+    tune.report(loss=1.0)
+
+
+# ---------------------------------------------------------------------------------
+# Raw worker protocol
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+class TestProcessWorkerProtocol:
+    def _recv(self, w, want, timeout=60.0):
+        assert w.conn.poll(timeout), f"no {want} within {timeout}s"
+        msg = w.conn.recv()
+        assert msg[0] == want, msg
+        return msg
+
+    def test_step_save_restore_reset_stop(self, tmp_path):
+        spill = str(tmp_path / "spill")
+        w = ProcessWorker(COUNTER_FACTORY, "t0", {"inc": 1}, spill)
+        try:
+            self._recv(w, "READY")
+            w.send("STEP")
+            _, iteration, metrics, done = self._recv(w, "RESULT")
+            assert (iteration, done) == (1, False) and metrics["n"] == 1
+
+            w.send("SAVE")
+            _, key, it = self._recv(w, "SAVED")
+            assert it == 1
+            # checkpoint bytes are on the shared spill surface, decodable
+            host_store = ObjectStore(spill_dir=spill)
+            state = tree_from_bytes(host_store.get(key))
+            assert state == {"n": 1}
+
+            w.send("STEP")
+            self._recv(w, "RESULT")
+            w.send("RESTORE", key, 1)
+            self._recv(w, "RESTORED")
+            w.send("STEP")
+            _, iteration, metrics, _ = self._recv(w, "RESULT")
+            assert iteration == 2 and metrics["n"] == 2  # restored n=1, +1
+
+            w.send("RESET_CONFIG", {"inc": 10})
+            _, ok = self._recv(w, "RESET")
+            assert ok
+            w.send("STEP")
+            _, _, metrics, _ = self._recv(w, "RESULT")
+            assert metrics["n"] == 12
+
+            w.send("STOP")
+            self._recv(w, "STOPPED")
+            assert w.join(timeout=30)
+        finally:
+            w.kill()
+
+    def test_error_reported_not_fatal_to_parent(self, tmp_path):
+        fac = TrainableFactory(target="_worker_trainables:CrashOnce",
+                               sys_path=(TESTS_DIR,))
+        w = ProcessWorker(fac, "t0", {"fail_at": 1, "marker_dir": str(tmp_path)},
+                          str(tmp_path / "spill"))
+        try:
+            self._recv(w, "READY")
+            w.send("STEP")
+            msg = self._recv(w, "ERROR")
+            assert "injected failure" in msg[1]
+            assert w.join(timeout=30)  # worker exits after reporting
+        finally:
+            w.kill()
+
+    def test_kill_reclaims_mid_step(self, tmp_path):
+        fac = TrainableFactory(target="_worker_trainables:Sleeper",
+                               sys_path=(TESTS_DIR,))
+        w = ProcessWorker(fac, "t0", {"sleep_s": 60.0}, str(tmp_path / "spill"))
+        try:
+            self._recv(w, "READY")
+            w.send("STEP")  # now stuck inside a 60s step
+            w.kill(join_timeout=10)
+            assert not w.alive()  # SIGKILL reclaims what a thread never could
+        finally:
+            if w.alive():
+                w.kill()
