@@ -1,0 +1,298 @@
+"""Elastic reclaim benchmark: checkpoint-boundary slice resize vs static
+placement on an early-stopping sweep (DESIGN.md §6).
+
+An ASHA sweep where most trials are early-stopped frees most of the pool
+while the survivors are still small — the utilization gap the elastic tier
+closes.  Each trial's step costs a fixed amount of *device-time*
+(``work_s`` device-seconds, simulated as ``sleep(work_s / slice.size)``), so
+a survivor that absorbs freed devices finishes measurably sooner.  The bench
+runs the identical sweep twice on the concurrent executor — static placement
+vs ``GreedyFill`` elastic — and compares:
+
+- **makespan**: wall time for the whole sweep;
+- **device-idle time**: the integral of free pool devices over the sweep
+  (sampled at every runner event), i.e. capacity bought but not used.
+
+    python benchmarks/bench_elastic.py            # full run + gate
+    python benchmarks/bench_elastic.py --smoke    # CI smoke (shorter, same gate)
+
+Writes benchmarks/results/bench_elastic.csv and exits non-zero when the
+elastic run is not at least ``--min-gain`` faster in makespan (default: 10%
+— the modeled gain is ~2x, so the gate tests the mechanism, not the noise).
+
+The gate is hardware-aware in the same spirit as bench_process: the step
+cost is a ``time.sleep``, so the only way the premise breaks is a host whose
+sleeps are wildly inflated (tight cgroup quota, heavily oversubscribed CI
+runner).  The bench first *measures* sleep fidelity and skips the gate when
+a nominal 20ms sleep takes >2x its requested duration — on such a host the
+step cost is scheduler noise, not the simulated device-time.
+
+A second, ungated section records the **lookahead credit** win: a FIFO
+process-tier sweep of GIL-bound ~2ms steps at k=1 vs k=4.  With k>1 the
+worker pipelines STEP commands instead of paying a pipe round-trip to the
+control plane per result; the ratio is recorded in the CSV for tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_root = os.path.join(_here, os.pardir)
+_src = os.path.join(_root, "src")
+for p in (_src,):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import (ASHAScheduler, CheckpointManager,
+                        ConcurrentMeshExecutor, FIFOScheduler, GreedyFill,
+                        Logger, ObjectStore, ProcessMeshExecutor, Resources,
+                        ResourceBroker, Trial, TrialRunner, TrialStatus,
+                        TrainableFactory)
+from repro.core.api import Trainable
+from repro.dist.submesh import SlicePool
+
+try:
+    from .common import write_csv
+except ImportError:
+    sys.path.insert(0, _here)
+    from common import write_csv
+
+BUSY_FACTORY = TrainableFactory(target="_busy:BusyTrainable", sys_path=(_here,))
+
+
+class ElasticWork(Trainable):
+    """Step cost = ``work_s`` device-seconds spread over the trial's slice:
+    sleep(work_s / devices).  loss = quality + 1/n separates good trials
+    (small quality -> ASHA survivors) from bad ones (early-stopped)."""
+
+    def setup(self, config):
+        self.n = 0
+        self.quality = float(config["quality"])
+        self.work_s = float(config["work_s"])
+
+    def step(self):
+        sl = self.config.get("_slice")
+        devices = sl.size if sl is not None else 1
+        time.sleep(self.work_s / devices)
+        self.n += 1
+        return {"loss": self.quality + 1.0 / self.n, "devices": devices}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+
+class _IdleSampler(Logger):
+    """Integrates free pool devices over time: every runner event is a sample
+    point, so the integral tracks exactly the capacity the control plane
+    could have used but didn't."""
+
+    def __init__(self, pool: SlicePool):
+        self.pool = pool
+        self._t = time.perf_counter()
+        self._free = pool.n_free
+        self.idle_device_s = 0.0
+
+    def _sample(self) -> None:
+        now = time.perf_counter()
+        self.idle_device_s += self._free * (now - self._t)
+        self._t, self._free = now, self.pool.n_free
+
+    def on_result(self, trial, result):
+        self._sample()
+
+    def on_event(self, trial, event):
+        self._sample()
+
+    def on_experiment_end(self, trials):
+        self._sample()
+
+
+def measure_sleep_fidelity(dt: float = 0.02, reps: int = 5) -> float:
+    """measured/nominal duration of a short sleep on this host.  ~1.0 on a
+    sane machine; >>1 on an oversubscribed runner whose scheduler quantum
+    dwarfs the simulated step cost."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        time.sleep(dt)
+        best = min(best, time.perf_counter() - t0)
+    return best / dt
+
+
+def run_sweep(elastic: bool, n_trials: int, max_iters: int, work_s: float,
+              devices_per_trial: int = 2) -> Dict[str, Any]:
+    pool = SlicePool(n_virtual=n_trials * devices_per_trial)
+    executor = ConcurrentMeshExecutor(
+        lambda name: ElasticWork,
+        CheckpointManager(ObjectStore()),
+        total_devices=pool.n_total, slice_pool=pool, checkpoint_freq=0)
+    scheduler = ASHAScheduler(metric="loss", mode="min", max_t=max_iters,
+                              grace_period=2, reduction_factor=2)
+    broker = ResourceBroker(policy=GreedyFill()) if elastic else None
+    sampler = _IdleSampler(pool)
+    runner = TrialRunner(scheduler, executor, logger=sampler,
+                         stopping_criteria={"training_iteration": max_iters},
+                         broker=broker)
+    # 1/4 good trials (ASHA survivors), the rest clearly worse — early stops
+    # free capacity while survivors still have most of their iterations left.
+    n_good = max(1, n_trials // 4)
+    for i in range(n_trials):
+        quality = 0.05 * i if i < n_good else 2.0 + i
+        runner.add_trial(Trial(
+            {"quality": quality, "work_s": work_s},
+            resources=Resources(devices=devices_per_trial),
+            stopping_criteria={"training_iteration": max_iters}))
+    t0 = time.perf_counter()
+    trials = runner.run()
+    makespan = time.perf_counter() - t0
+    n_finished = sum(t.status == TrialStatus.TERMINATED for t in trials)
+    assert n_finished == n_trials, [(t.status, t.error) for t in trials]
+    max_devices = max(r.metrics.get("devices", 0)
+                      for t in trials for r in t.results)
+    return {
+        "bench": "elastic_reclaim",
+        "mode": "elastic" if elastic else "static",
+        "n_trials": n_trials, "max_iters": max_iters, "work_s": work_s,
+        "devices_per_trial": devices_per_trial,
+        "makespan_s": round(makespan, 3),
+        "idle_device_s": round(sampler.idle_device_s, 3),
+        "n_early_stopped": scheduler.n_stopped,
+        "n_resized": broker.n_resized if broker else 0,
+        "max_trial_devices": max_devices,
+    }
+
+
+def run_lookahead(lookahead: int, n_trials: int = 2, iters: int = 120,
+                  n_inner: int = 12_000) -> Dict[str, Any]:
+    """FIFO process-tier sweep of short GIL-bound steps: k>1 pipelines STEPs
+    in the worker pipe instead of paying a control-plane RTT per result."""
+    executor = ProcessMeshExecutor(
+        factory_resolver=lambda name: BUSY_FACTORY,
+        checkpoint_manager=CheckpointManager(ObjectStore()),
+        total_devices=n_trials, checkpoint_freq=0)
+    runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
+                         stopping_criteria={"training_iteration": iters},
+                         broker=ResourceBroker(lookahead=lookahead))
+    for _ in range(n_trials):
+        runner.add_trial(Trial({"n_inner": n_inner},
+                               resources=Resources(devices=1),
+                               stopping_criteria={"training_iteration": iters}))
+    t0 = time.perf_counter()
+    trials = runner.run()
+    wall = time.perf_counter() - t0
+    assert all(t.status == TrialStatus.TERMINATED for t in trials), \
+        [(t.status, t.error) for t in trials]
+    n_results = sum(t.training_iteration for t in trials)
+    ts = sorted(r.timestamp for t in trials for r in t.results)
+    steady = (len(ts) - 1) / max(ts[-1] - ts[0], 1e-9) if len(ts) > 1 else 0.0
+    return {"bench": "elastic_lookahead", "lookahead": lookahead,
+            "n_trials": n_trials, "iters": iters, "n_inner": n_inner,
+            "wall_s": round(wall, 3),
+            "results_per_s": round(n_results / wall, 2),
+            "steady_results_per_s": round(steady, 2)}
+
+
+def run(n_trials: int = 8, max_iters: int = 10, work_s: float = 0.3,
+        lookahead_iters: int = 120) -> List[Dict[str, Any]]:
+    """Harness entry (benchmarks.run): returns the result rows."""
+    fidelity = measure_sleep_fidelity()
+    print(f"[bench_elastic] sleep fidelity {fidelity:.2f}x nominal")
+    rows: List[Dict[str, Any]] = []
+    for elastic in (False, True):
+        row = run_sweep(elastic, n_trials, max_iters, work_s)
+        row["sleep_fidelity"] = round(fidelity, 2)
+        print(f"[bench_elastic] {row['mode']:8s} makespan={row['makespan_s']:.3f}s "
+              f"idle={row['idle_device_s']:.2f} device-s "
+              f"(stopped {row['n_early_stopped']}, resizes {row['n_resized']}, "
+              f"max slice {row['max_trial_devices']})")
+        rows.append(row)
+    static, elastic_row = rows[0], rows[1]
+    elastic_row["makespan_ratio"] = round(
+        elastic_row["makespan_s"] / max(static["makespan_s"], 1e-9), 3)
+    elastic_row["idle_ratio"] = round(
+        elastic_row["idle_device_s"] / max(static["idle_device_s"], 1e-9), 3)
+
+    for k in (1, 4):
+        row = run_lookahead(k, iters=lookahead_iters)
+        print(f"[bench_elastic] lookahead k={k}: "
+              f"{row['results_per_s']:.1f} results/s "
+              f"(steady {row['steady_results_per_s']:.1f}/s)")
+        rows.append(row)
+    k1, k4 = rows[2], rows[3]
+    # End-to-end throughput, boot included: with k>1 results arrive in bursts,
+    # which skews the first-to-last-timestamp "steady" window, so the honest
+    # comparison is the whole sweep.
+    k4["speedup_vs_k1"] = round(
+        k4["results_per_s"] / max(k1["results_per_s"], 1e-9), 2)
+    print(f"[bench_elastic] lookahead k=4 vs k=1 throughput: "
+          f"{k4['speedup_vs_k1']:.2f}x (recorded, not gated)")
+
+    # Two row shapes (reclaim sweep + lookahead sweep) share one CSV: pad to
+    # the union of keys so DictWriter sees a uniform schema.
+    fields: List[str] = []
+    for row in rows:
+        fields.extend(k for k in row if k not in fields)
+    padded = [{k: row.get(k, "") for k in fields} for row in rows]
+    path = write_csv("bench_elastic", padded)
+    print(f"[bench_elastic] elastic/static makespan "
+          f"{elastic_row['makespan_ratio']:.3f}, idle {elastic_row['idle_ratio']:.3f} "
+          f"-> {path}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--max-iters", type=int, default=10)
+    ap.add_argument("--work-s", type=float, default=0.3,
+                    help="device-seconds of simulated work per iteration "
+                         "(a trial's step sleeps work_s / slice_devices)")
+    ap.add_argument("--min-gain", type=float, default=0.10,
+                    help="required makespan reduction (elastic must finish in "
+                         "<= (1 - min_gain) * static makespan); the modeled "
+                         "gain at the default shape is ~2x")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: shorter sweep, same gate")
+    args = ap.parse_args()
+    if args.smoke:
+        args.trials = min(args.trials, 8)
+        args.max_iters = min(args.max_iters, 8)
+        args.work_s = min(args.work_s, 0.25)
+
+    rows = run(args.trials, args.max_iters, args.work_s,
+               lookahead_iters=60 if args.smoke else 120)
+    static, elastic = rows[0], rows[1]
+
+    if elastic["n_resized"] == 0:
+        print("[bench_elastic] FAIL: the elastic run never resized a slice — "
+              "the control plane is not engaging", file=sys.stderr)
+        return 1
+    if elastic["sleep_fidelity"] > 2.0:
+        # Sleeps (the simulated device-time) are dominated by host scheduling
+        # noise: the premise — step cost scales with slice size — doesn't
+        # hold here.  Report, but don't fail the build on such hardware.
+        print(f"[bench_elastic] SKIP gate: sleep fidelity "
+              f"{elastic['sleep_fidelity']:.2f}x > 2x — this host cannot "
+              f"express the simulated device-time (results recorded)")
+        return 0
+    required = 1.0 - args.min_gain
+    ratio = elastic["makespan_ratio"]
+    if ratio > required:
+        print(f"[bench_elastic] FAIL: elastic/static makespan {ratio:.3f} > "
+              f"required {required:.3f} (elastic reclaim must cut makespan by "
+              f">= {args.min_gain:.0%})", file=sys.stderr)
+        return 1
+    print(f"[bench_elastic] PASS: makespan ratio {ratio:.3f} <= {required:.3f} "
+          f"(idle-device ratio {elastic['idle_ratio']:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

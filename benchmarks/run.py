@@ -10,6 +10,7 @@ benchmarks/results/*.csv.
   overhead     — event-loop + checkpoint-codec throughput
   scaling      — slice-pool occupancy under irregular trials (paper §4.3.1)
   process      — GIL-contention sweep: process vs thread vs serial executors
+  elastic      — elastic slice reclaim vs static placement + lookahead credits
   vmap         — beyond-paper: stacked-vmap trial execution vs serial
   kernels      — pure-jnp oracle timings (TPU kernel baselines)
   roofline     — per-(arch x shape x mesh) table from the dry-run artifacts
@@ -25,12 +26,12 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="run a single bench (loc|convergence|overhead|"
-                         "scaling|async|process|vmap|kernels|roofline)")
+                         "scaling|async|process|elastic|vmap|kernels|roofline)")
     args = ap.parse_args()
 
-    from . import (bench_async, bench_convergence, bench_kernels, bench_loc,
-                   bench_overhead, bench_process, bench_roofline,
-                   bench_scaling, bench_vmap)
+    from . import (bench_async, bench_convergence, bench_elastic,
+                   bench_kernels, bench_loc, bench_overhead, bench_process,
+                   bench_roofline, bench_scaling, bench_vmap)
     benches = {
         "loc": bench_loc.run,
         "convergence": bench_convergence.run,
@@ -38,6 +39,7 @@ def main() -> None:
         "scaling": bench_scaling.run,
         "async": bench_async.run,
         "process": bench_process.run,
+        "elastic": bench_elastic.run,
         "vmap": bench_vmap.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,

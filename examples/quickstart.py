@@ -4,6 +4,16 @@ A function-based trainable (cooperative API), a 3x2 grid search, and an
 asynchronous-HyperBand scheduler:
 
     PYTHONPATH=src python examples/quickstart.py
+
+For real sweeps on a device mesh, the launcher adds placement and the
+elastic control plane on top of the same call, e.g.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \\
+        --scheduler asha --executor process --elastic greedy
+
+which lets ASHA survivors absorb the mesh slices of early-stopped trials at
+their next checkpoint boundary (and `--lookahead K` pipelines K results per
+worker on FIFO throughput sweeps).  See DESIGN.md §6.
 """
 import numpy as np
 

@@ -16,6 +16,7 @@ from .events import EventBus, EventType, TrialEvent
 from .executor import BusDrivenExecutor, SerialMeshExecutor, TrialExecutor
 from .concurrent_executor import ConcurrentMeshExecutor
 from .process_executor import ProcessMeshExecutor
+from .elastic import FairShare, GreedyFill, ResizePolicy, ResourceBroker
 from .workers import (ProcessWorker, TrainableFactory, factory_from_class,
                       register_worker_factory, resolve_worker_factory)
 from .trial import Checkpoint, Result, Trial, TrialStatus
@@ -39,6 +40,7 @@ __all__ = [
     "Trial", "TrialStatus", "Result", "Checkpoint",
     "TrialRunner", "TrialExecutor", "SerialMeshExecutor", "BusDrivenExecutor",
     "ConcurrentMeshExecutor", "ProcessMeshExecutor",
+    "ResourceBroker", "ResizePolicy", "GreedyFill", "FairShare",
     "TrainableFactory", "ProcessWorker", "register_worker_factory",
     "resolve_worker_factory", "factory_from_class",
     "EventBus", "EventType", "TrialEvent",

@@ -14,12 +14,18 @@ sequentially.  Here each RUNNING trial gets its own worker thread:
   straggler timeout, so the runner's event loop always makes progress (and
   can surface stuck trials) even when no result arrives.
 
-Scheduler semantics are preserved exactly: at most one un-consumed result per
-trial is ever in flight, so PAUSE/STOP/PBT-clone decisions apply before the
-trial advances past the result they were made on.  Failure handling is
-checkpoint-based (paper §4.2): a worker that raises publishes ERROR and the
-runner re-queues the trial from its last checkpoint, bounded by
-``max_failures`` (runner.py).
+Scheduler semantics are preserved exactly at the default ``lookahead=1``: at
+most one un-consumed result per trial is ever in flight, so PAUSE/STOP/
+PBT-clone decisions apply before the trial advances past the result they
+were made on.  The gate is a credit *semaphore* (DESIGN.md §6): the elastic
+broker may grant ``k>1`` credits — but only for schedulers that declare
+``decision_interval() == 0`` (pure run-to-completion), where no decision can
+be stale.  With ``k>1`` a stop can land mid-step; teardown then waits out
+``join_timeout`` and falls back to the same abandoned-worker contract as a
+straggler (at most k-1 extra steps are computed and fenced as stale).
+Failure handling is checkpoint-based (paper §4.2): a worker that raises
+publishes ERROR and the runner re-queues the trial from its last checkpoint,
+bounded by ``max_failures`` (runner.py).
 
 Threading contract (DESIGN.md §4): the runner thread owns trial lifecycle
 (start/pause/stop/restart) and all ResourceAccountant/SlicePool mutation;
@@ -46,17 +52,32 @@ __all__ = ["ConcurrentMeshExecutor"]
 class _WorkerState:
     """Per-trial worker bookkeeping; one instance per (re)launched thread."""
 
-    def __init__(self, trial: Trial, trainable: Trainable):
+    def __init__(self, trial: Trial, trainable: Trainable, credits: int = 1):
         self.trial = trial
         self.trainable = trainable
         self.thread: Optional[threading.Thread] = None
-        self.resume = threading.Event()   # runner CONTINUE gate
+        # Credit-counting resume gate (DESIGN.md §6): each credit is one step
+        # the runner has granted.  credits=1 is exactly PR 2's binary gate —
+        # at most one un-consumed result per trial; k>1 lets the worker run
+        # ahead for run-to-completion schedulers.
+        self.credits = threading.Semaphore(credits)
+        self.granted = credits            # runner-thread writes only
+        self.published = 0                # worker-thread writes only
         self.stop = threading.Event()     # runner halt request
         self.lock = threading.Lock()      # guards the trainable
         self.in_step = False
         self.step_started = 0.0
         self.last_warned = 0.0
         self.dead = False                 # worker exited after publishing ERROR
+
+    @property
+    def parked(self) -> bool:
+        """No granted-but-unpublished steps: the worker thread is blocked on
+        the credit gate (or about to be) and the trainable is quiescent.  Each
+        counter has a single writer; `published` is incremented *before* the
+        bus publish, so by the time the runner processes a result the counters
+        already agree."""
+        return self.granted == self.published
 
 
 class ConcurrentMeshExecutor(BusDrivenExecutor):
@@ -88,7 +109,13 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
     # -- worker loop ----------------------------------------------------------------
     def _run_worker(self, ws: _WorkerState) -> None:
         trial_id = ws.trial.trial_id
-        while not ws.stop.is_set():
+        while True:
+            # Acquire one step credit; the runner grants them on CONTINUE
+            # (and _halt releases one after setting stop, so a halted worker
+            # wakes here exactly once and exits; no polling).
+            ws.credits.acquire()
+            if ws.stop.is_set():
+                return
             with ws.lock:
                 ws.step_started = time.time()
                 ws.in_step = True
@@ -131,14 +158,10 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                     self.bus.publish(TrialEvent(
                         EventType.ERROR, trial_id, error=traceback.format_exc()))
                     return
+            ws.published += 1  # before publish: see _WorkerState.parked
             self.bus.publish(TrialEvent(EventType.RESULT, trial_id, result=result))
             if done:
                 return  # the runner will stop_trial on the final result
-            # Park until the runner applies the scheduler decision.  _halt
-            # sets stop before resume, so a halted worker wakes here exactly
-            # once and exits; no polling.
-            ws.resume.wait()
-            ws.resume.clear()
 
     def _monitor(self) -> None:
         interval = max(0.05, min(1.0, self.heartbeat_timeout / 4))
@@ -153,8 +176,13 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                         info={"stalled_s": round(now - ws.step_started, 3)}))
 
     # -- lifecycle ------------------------------------------------------------------
-    def _spawn(self, trial: Trial, trainable: Trainable) -> None:
-        ws = _WorkerState(trial, trainable)
+    def _spawn(self, trial: Trial, trainable: Trainable,
+               credits: Optional[int] = None) -> None:
+        # A fresh trial starts with the full lookahead grant; a worker
+        # respawned mid-decision (resize) starts with 0 — the k un-consumed
+        # results' CONTINUEs re-grant the window one resume at a time.
+        ws = _WorkerState(trial, trainable,
+                          credits=self.lookahead if credits is None else credits)
         ws.thread = threading.Thread(
             target=self._run_worker, args=(ws,),
             name=f"repro-worker-{trial.trial_id}", daemon=True)
@@ -209,7 +237,7 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         Returns False when the join timed out — the worker is still inside a
         straggling step and must be treated as abandoned."""
         ws.stop.set()
-        ws.resume.set()
+        ws.credits.release()  # wake a parked worker; it re-checks stop first
         if ws.thread is not None and ws.thread.is_alive():
             ws.thread.join(timeout=self.join_timeout)
             return not ws.thread.is_alive()
@@ -251,8 +279,41 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
     # -- runner-driven transitions -------------------------------------------------
     def resume_trial(self, trial: Trial) -> None:
         ws = self._workers.get(trial.trial_id)
-        if ws is not None:
-            ws.resume.set()
+        if ws is not None and not ws.dead:
+            ws.granted += 1
+            ws.credits.release()
+
+    def trial_idle(self, trial: Trial) -> bool:
+        ws = self._workers.get(trial.trial_id)
+        return ws is not None and not ws.dead and ws.parked
+
+    def resize_trial(self, trial: Trial, new_devices: int) -> bool:
+        """Checkpoint-boundary slice resize (DESIGN.md §6): the worker is
+        parked at the credit gate, so halting it is immediate.  The rebuild
+        core (`_resize_rebuild`) rolls back to the exact old slice on any
+        failure, in which case the old trainable is respawned — the trial
+        never observes a torn state."""
+        ws = self._workers.get(trial.trial_id)
+        if (ws is None or ws.dead or self.slice_pool is None
+                or new_devices == trial.resources.devices
+                or not ws.parked):
+            return False
+        # The worker is parked (no granted-but-unpublished steps), so once
+        # stop is set its only remaining action is the side-effect-free
+        # stop-check right after the credit gate — it can never touch the
+        # trainable again.  Even a starved join (timeout) is therefore safe
+        # to proceed past; the thread exits on its own without stepping.
+        self._halt(ws)
+        del self._workers[trial.trial_id]  # resources stay acquired
+        new_trainable = self._resize_rebuild(trial, ws.trainable, new_devices)
+        # Respawn with 0 credits: at this boundary exactly k results are
+        # un-consumed (credits granted = k + consumed, all stepped), and each
+        # of their CONTINUEs — starting with the resume_trial that follows
+        # this resize — grants one credit, restoring the k-wide window.
+        # Seeding more here would inflate it past k.
+        self._spawn(trial, new_trainable if new_trainable is not None
+                    else ws.trainable, credits=0)
+        return new_trainable is not None
 
     def pause_trial(self, trial: Trial) -> None:
         ws = self._workers.get(trial.trial_id)

@@ -38,6 +38,9 @@ class EventType(str, enum.Enum):
     HEARTBEAT_MISSED = "HEARTBEAT_MISSED"  # a step exceeded the straggler timeout
     RESTARTED = "RESTARTED"                # trial re-queued for restart-from-checkpoint
     KILLED = "KILLED"                      # straggling worker process SIGKILLed (DESIGN.md §5)
+    RESIZED = "RESIZED"                    # elastic slice resize applied (DESIGN.md §6)
+    RESIZE_FAILED = "RESIZE_FAILED"        # resize rejected/rolled back; trial keeps its old slice
+    CREDITS = "CREDITS"                    # lookahead credit grant changed for a trial
 
 
 @dataclass

@@ -28,6 +28,32 @@ __all__ = ["TrialExecutor", "SerialMeshExecutor", "BusDrivenExecutor"]
 class TrialExecutor:
     """Interface the runner drives."""
 
+    lookahead = 1  # un-consumed results a worker may run ahead of the scheduler
+
+    def set_lookahead(self, k: int) -> None:
+        """Installed by the elastic ResourceBroker (DESIGN.md §6) before any
+        trial starts.  Gated tiers spawn workers with this many step credits;
+        poll-style executors are inherently one-at-a-time and ignore it."""
+        self.lookahead = max(1, int(k))
+
+    def resize_trial(self, trial: Trial, new_devices: int) -> bool:
+        """Grow/shrink the trial's mesh slice at a checkpoint boundary
+        (SAVE -> swap slice -> rebuild + re-shard -> RESTORE).  Returns False
+        when unsupported or rolled back — the trial then keeps stepping on its
+        old slice.  Default: unsupported."""
+        return False
+
+    def trial_idle(self, trial: Trial) -> bool:
+        """True when the trial's worker is parked at the resume gate with no
+        granted-but-unfinished steps — the only state a resize may interrupt.
+        Poll-style executors only step while the runner waits, so whenever the
+        runner holds control every trial is at a boundary."""
+        return True
+
+    def held_slice(self, trial_id: str):
+        """The MeshSlice the trial currently holds, or None."""
+        return None
+
     def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
         raise NotImplementedError
 
@@ -124,6 +150,84 @@ class _SlicedExecutor(TrialExecutor):
     def _set_requeue_status(self, trial: Trial) -> None:
         trial.set_status(
             TrialStatus.PAUSED if trial.checkpoint is not None else TrialStatus.PENDING)
+
+    def held_slice(self, trial_id: str):
+        return self._slices.get(trial_id)
+
+    # -- elastic slice swap (DESIGN.md §6) ------------------------------------------
+    def _swap_slice(self, trial: Trial, new_devices: int) -> Tuple[Any, Any, Any]:
+        """Move the trial's pool slice and accounting to ``new_devices``.
+
+        Returns ``(old_resources, old_slice, new_slice)`` for a later rollback
+        via ``_unswap_slice``; raises RuntimeError (pool or accountant full)
+        with everything unchanged.  No trainable side effects — the caller
+        rebuilds the mesh around this.
+        """
+        from .resources import Resources
+        old_res = trial.resources
+        new_res = Resources(cpu=old_res.cpu, devices=new_devices)
+        old_sl = self._slices[trial.trial_id]
+        new_sl = self.slice_pool.resize(old_sl, new_devices)
+        try:
+            self.accountant.release(old_res)
+            self.accountant.acquire(new_res)
+        except RuntimeError:
+            # Pool moved but the accountant refused: put the exact old range
+            # back (nothing else allocated in between — runner thread).
+            self.accountant.acquire(old_res)
+            self.slice_pool.release(new_sl)
+            restored = self.slice_pool.acquire_at(old_sl.start, old_sl.size)
+            self._slices[trial.trial_id] = restored
+            raise
+        self._slices[trial.trial_id] = new_sl
+        trial.resources = new_res
+        return old_res, old_sl, new_sl
+
+    def _unswap_slice(self, trial: Trial, old_res: Any, old_sl: Any,
+                      new_sl: Any) -> None:
+        """Roll a ``_swap_slice`` back after a failed rebuild: the trial ends
+        up on the *exact* old device range its live mesh still covers."""
+        self.slice_pool.release(new_sl)
+        restored = self.slice_pool.acquire_at(old_sl.start, old_sl.size)
+        self.accountant.release(trial.resources)
+        self.accountant.acquire(old_res)
+        self._slices[trial.trial_id] = restored
+        trial.resources = old_res
+
+    def _resize_rebuild(self, trial: Trial, trainable: Trainable,
+                        new_devices: int):
+        """The in-host resize core shared by the serial and thread tiers:
+        SAVE (in-memory) -> swap the pool slice -> rebuild the trainable over
+        the new sub-mesh (its setup re-shards via repro.dist.sharding from
+        the new ``_slice``) -> RESTORE, iteration preserved.  Returns the
+        rebuilt trainable, or None with the swap fully rolled back — the
+        caller then keeps ``trainable`` serving on the old slice."""
+        try:
+            state = trainable.save()
+        except Exception:  # noqa: BLE001 — unsaveable trainables can't resize
+            return None
+        try:
+            old_res, old_sl, new_sl = self._swap_slice(trial, new_devices)
+        except RuntimeError:
+            return None
+        new_trainable = None
+        try:
+            new_trainable = self._instantiate(trial)
+            new_trainable.restore(state)
+            new_trainable.iteration = trainable.iteration
+        except Exception:  # noqa: BLE001 — fall back to the old slice
+            if new_trainable is not None:  # built but failed to restore
+                try:
+                    new_trainable.cleanup()
+                except Exception:  # noqa: BLE001
+                    pass
+            self._unswap_slice(trial, old_res, old_sl, new_sl)
+            return None
+        try:
+            trainable.cleanup()
+        except Exception:  # noqa: BLE001
+            pass
+        return new_trainable
 
 
 class BusDrivenExecutor(_SlicedExecutor):
@@ -279,6 +383,21 @@ class SerialMeshExecutor(_SlicedExecutor):
             new_trainable = self._running[trial.trial_id]
             new_trainable.restore(state)
             new_trainable.iteration = checkpoint.training_iteration
+
+    # -- elastic resize (DESIGN.md §6) ----------------------------------------------
+    def resize_trial(self, trial: Trial, new_devices: int) -> bool:
+        """Checkpoint-boundary slice resize; on any rebuild failure the swap
+        is rolled back and the old trainable keeps running on its old slice
+        (see ``_resize_rebuild``)."""
+        trainable = self._running.get(trial.trial_id)
+        if (trainable is None or self.slice_pool is None
+                or new_devices == trial.resources.devices):
+            return False
+        new_trainable = self._resize_rebuild(trial, trainable, new_devices)
+        if new_trainable is None:
+            return False
+        self._running[trial.trial_id] = new_trainable
+        return True
 
     # -- stepping -------------------------------------------------------------------
     def get_next_result(self) -> Optional[Tuple[Trial, Any]]:

@@ -165,6 +165,8 @@ def run_experiments(
     max_experiment_failures: int = 0,
     heartbeat_timeout: float = 60.0,
     straggler_deadline: float = 0.0,
+    elastic: Union[None, str, Any] = None,
+    lookahead: int = 1,
     metric: Optional[str] = None,
     mode: Optional[str] = None,
     resume: bool = False,
@@ -181,6 +183,17 @@ def run_experiments(
     last checkpoint up to that many times before marking it ERROR;
     ``max_experiment_failures`` aborts the whole experiment once more trials
     than that have errored.
+
+    ``elastic`` turns on the elastic resource control plane (DESIGN.md §6):
+    ``"greedy"`` (survivors absorb devices freed by early-stopped trials),
+    ``"fair"`` (rebalance the pool across running trials), ``"off"``/None, or
+    a ``repro.core.elastic.ResizePolicy`` instance.  Resizes happen at
+    checkpoint boundaries (SAVE -> swap slice -> rebuild + re-shard ->
+    RESTORE) and need a ``slice_pool``.  ``lookahead`` lets each worker run
+    up to K un-consumed results ahead of the scheduler on throughput-bound
+    sweeps; it is clamped to 1 automatically whenever the scheduler can
+    stop/pause/perturb trials (``Scheduler.decision_interval() != 0``), so
+    scheduler decisions stay serial-exact.
 
     ``resume=True`` (requires ``log_dir``) restores the trial list of an
     interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
@@ -245,6 +258,12 @@ def run_experiments(
         loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl")))
     logger = CompositeLogger(loggers)
 
+    broker = None
+    if (elastic not in (None, "off")) or lookahead != 1:
+        from .elastic import ResourceBroker, resolve_policy
+        broker = ResourceBroker(policy=resolve_policy(elastic),
+                                lookahead=lookahead)
+
     runner = TrialRunner(
         scheduler=scheduler,
         executor=executor,
@@ -255,6 +274,7 @@ def run_experiments(
         stopping_criteria=stop,
         max_failures=max_failures,
         max_experiment_failures=max_experiment_failures,
+        broker=broker,
     )
     if log_dir:
         import weakref

@@ -77,6 +77,27 @@ class ConsoleLogger(Logger):
                   f"({event.info.get('num_failures', '?')}/"
                   f"{event.info.get('max_failures', '?')}); restarting from {where}",
                   file=self.stream)
+        elif kind == "RESIZED":
+            info = event.info
+            print(f"[tune] {trial.trial_id} slice resized "
+                  f"{info.get('from_devices', '?')} -> {info.get('to_devices', '?')} "
+                  f"devices ({info.get('policy', '?')}; pool "
+                  f"{info.get('utilization', 0) * 100:.0f}% used, "
+                  f"{info.get('holes', '?')} holes)", file=self.stream)
+        elif kind == "RESIZE_FAILED":
+            info = event.info
+            print(f"[tune] WARNING {trial.trial_id} resize "
+                  f"{info.get('from_devices', '?')} -> {info.get('to_devices', '?')} "
+                  f"failed; trial falls back to its old slice "
+                  f"(largest free block {info.get('largest_free_block', '?')})",
+                  file=self.stream)
+        elif kind == "CREDITS":
+            info = event.info
+            print(f"[tune] {trial.trial_id} lookahead credits: "
+                  f"{info.get('granted', '?')} granted "
+                  f"(requested {info.get('requested', '?')}, scheduler decision "
+                  f"interval {info.get('decision_interval', '?')})",
+                  file=self.stream)
 
     def on_experiment_end(self, trials: List[Trial]) -> None:
         if not self.verbose:

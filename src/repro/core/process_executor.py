@@ -41,8 +41,8 @@ from .checkpoint import CheckpointManager
 from .events import EventBus, EventType, TrialEvent
 from .executor import BusDrivenExecutor
 from .trial import Checkpoint, Result, Trial, TrialStatus
-from .workers import (CMD_RESET_CONFIG, CMD_RESTORE, CMD_SAVE, CMD_STEP,
-                      CMD_STOP, ProcessWorker, TrainableFactory,
+from .workers import (CMD_RESET_CONFIG, CMD_RESIZE, CMD_RESTORE, CMD_SAVE,
+                      CMD_STEP, CMD_STOP, ProcessWorker, TrainableFactory,
                       resolve_worker_factory)
 from . import workers as _w
 
@@ -58,6 +58,14 @@ class _WorkerHandle:
         self.reply_q: "queue.Queue" = queue.Queue()  # SAVED/RESTORED/RESET/STOPPED
         self.ready = False
         self.in_step = False
+        # Lookahead credits (DESIGN.md §6): STEP commands sent but whose
+        # RESULT has not come back.  k=1 is PR 3's binary resume gate; k>1
+        # queues STEPs in the pipe so the child never idles a round-trip
+        # between a RESULT and its next step.  Mutated by the runner thread
+        # (_kick via resume) and the pump thread (_kick via READY, decrement
+        # on RESULT) — guarded by ctr_lock.
+        self.outstanding = 0
+        self.ctr_lock = threading.Lock()
         self.step_started = 0.0
         self.spawned_at = time.time()
         self.last_warned = 0.0
@@ -189,10 +197,15 @@ class ProcessMeshExecutor(BusDrivenExecutor):
                 # the max_failures retry can re-export it).
                 ws.restore_ckpt.pinned = False
                 ws.restore_ckpt = None
-            self._kick(ws)
+            self._kick(ws, n=self.lookahead)  # initial credit grant
         elif kind == _w.MSG_RESULT:
             _, iteration, metrics, done = msg
-            ws.in_step = False
+            with ws.ctr_lock:
+                ws.outstanding = max(0, ws.outstanding - 1)
+                ws.in_step = ws.outstanding > 0
+                # One result back = the next queued step begins now; restart
+                # the straggler clock so k queued steps aren't judged as one.
+                ws.step_started = time.time()
             self.bus.publish(TrialEvent(
                 EventType.RESULT, trial_id,
                 result=Result(trial_id=trial_id, training_iteration=iteration,
@@ -210,15 +223,20 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             ws.reply_q.put(("DEAD", msg[1]))
             if not ws.expecting_reply and not ws.stopping:
                 self.bus.publish(TrialEvent(EventType.ERROR, trial_id, error=msg[1]))
-        else:  # SAVED / RESTORED / RESET / STOPPED — a runner-side call waits
+        else:  # SAVED / RESTORED / RESET / RESIZED / STOPPED — a runner-side call waits
             ws.reply_q.put(msg)
 
-    def _kick(self, ws: _WorkerHandle) -> None:
-        """Send the next STEP (resume gate re-opened).  Pump or runner thread."""
-        ws.in_step = True
-        ws.step_started = time.time()
-        if not ws.worker.send(CMD_STEP):
-            ws.in_step = False  # pipe dead; pump will surface the EOF
+    def _kick(self, ws: _WorkerHandle, n: int = 1) -> None:
+        """Grant ``n`` step credits: send that many STEPs down the pipe (the
+        resume gate re-opened ``n`` results wide).  Pump or runner thread."""
+        with ws.ctr_lock:
+            if ws.outstanding == 0:
+                ws.step_started = time.time()
+            for _ in range(max(1, n)):
+                if not ws.worker.send(CMD_STEP):
+                    break  # pipe dead; pump will surface the EOF
+                ws.outstanding += 1
+            ws.in_step = ws.outstanding > 0
 
     # -- monitor: heartbeats, spawn watchdog, kill-on-straggle ------------------------
     def _monitor(self) -> None:
@@ -334,6 +352,29 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         return) instead of the event bus — the caller owns the fallback, and
         the runner must not later apply a stale ERROR to a rebuilt worker.
         """
+        # Drain leftovers from an earlier timed-out exchange first: a late
+        # reply with the SAME tag (e.g. a slow SAVE's MSG_SAVED arriving
+        # after its caller gave up) must never satisfy this exchange — it
+        # would hand back a stale checkpoint key and skew every subsequent
+        # reply by one.  Only this (runner) thread opens exchanges, so
+        # anything queued here predates this call; a DEAD sentinel is the
+        # one message that stays meaningful.
+        while True:
+            try:
+                stale = ws.reply_q.get_nowait()
+            except queue.Empty:
+                break
+            if stale[0] == "DEAD":
+                return None
+            if stale[0] == _w.MSG_SAVED:
+                # A timed-out SAVE's payload was spilled but never adopted:
+                # delete it or it strands a checkpoint-sized file for the
+                # life of the spill dir (keys are unique per save, so this
+                # can never touch an adopted checkpoint).
+                try:
+                    self.ckpt.store.delete(stale[1])
+                except OSError:
+                    pass
         ws.expecting_reply = True
         try:
             if not ws.worker.send(*cmd):
@@ -385,19 +426,27 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         return ws
 
     # -- checkpoints ------------------------------------------------------------------
+    def _adopt_saved(self, ws: _WorkerHandle, trial: Trial) -> Optional[Checkpoint]:
+        """Sync SAVE -> adopt the child-written key -> trial.checkpoint.
+        None when the worker didn't reply in time (caller owns the fallback)."""
+        rep = self._sync_exchange(ws, (CMD_SAVE,), _w.MSG_SAVED)
+        if rep is None:
+            return None
+        _, key, iteration = rep
+        with self._ckpt_lock:
+            ckpt = self.ckpt.adopt(trial.trial_id, iteration, key)
+        trial.checkpoint = ckpt
+        return ckpt
+
     def save_checkpoint(self, trial: Trial) -> Checkpoint:
         ws = self._workers[trial.trial_id]
         if ws.dead or not ws.ready:
             raise RuntimeError(
                 f"cannot checkpoint {trial.trial_id}: worker not serving "
                 f"(ready={ws.ready}, dead={ws.dead})")
-        rep = self._sync_exchange(ws, (CMD_SAVE,), _w.MSG_SAVED)
-        if rep is None:
+        ckpt = self._adopt_saved(ws, trial)
+        if ckpt is None:
             raise RuntimeError(f"worker for {trial.trial_id} did not SAVE in time")
-        _, key, iteration = rep
-        with self._ckpt_lock:
-            ckpt = self.ckpt.adopt(trial.trial_id, iteration, key)
-        trial.checkpoint = ckpt
         return ckpt
 
     # -- runner-driven transitions ----------------------------------------------------
@@ -405,6 +454,72 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         ws = self._workers.get(trial.trial_id)
         if ws is not None and ws.ready and not ws.dead:
             self._kick(ws)
+
+    def trial_idle(self, trial: Trial) -> bool:
+        # Unlike the thread tier, a worker mid-step is still resizable: the
+        # pipe serializes, so a queued SAVE lands *after* any outstanding
+        # STEPs — it is its own drain barrier and no result is ever torn.
+        ws = self._workers.get(trial.trial_id)
+        return ws is not None and ws.ready and not ws.dead
+
+    def resize_trial(self, trial: Trial, new_devices: int) -> bool:
+        """Checkpoint-boundary slice resize over the pipe protocol
+        (DESIGN.md §6): sync SAVE (queued behind any outstanding STEPs — the
+        pipe is the drain barrier — and adopted so a failed resize restarts
+        from *this* state), swap the pool slice on the runner thread, then
+        CMD_RESIZE — the child rebuilds the trainable over the new virtual
+        window and restores, all inside the warm process.  A child-side
+        rebuild failure is non-fatal: the old trainable keeps serving, and
+        the pool swap is rolled back to the exact old range.  A SAVE that
+        can't drain within reply_timeout aborts the resize (its late reply
+        is reaped by the _sync_exchange drain)."""
+        ws = self._workers.get(trial.trial_id)
+        if (ws is None or ws.dead or not ws.ready
+                or self.slice_pool is None
+                or new_devices == trial.resources.devices):
+            return False
+        ckpt = self._adopt_saved(ws, trial)
+        if ckpt is None:
+            if ws.dead:
+                # Child died during the boundary SAVE.  _sync_exchange
+                # swallowed the pipe-EOF ERROR (the caller owns the outcome),
+                # so surface it here or the trial is stranded RUNNING forever.
+                self.bus.publish(TrialEvent(
+                    EventType.ERROR, trial.trial_id,
+                    error=(f"worker for {trial.trial_id} died during the "
+                           "resize boundary SAVE; restart from the last "
+                           "checkpoint is governed by max_failures")))
+            return False
+        key, iteration = ckpt.store_key, ckpt.training_iteration
+        try:
+            old_res, old_sl, new_sl = self._swap_slice(trial, new_devices)
+        except RuntimeError:
+            return False
+        rep = self._sync_exchange(
+            ws, (CMD_RESIZE, self._worker_config(trial), key, iteration),
+            _w.MSG_RESIZED, timeout=max(self.reply_timeout, self.spawn_timeout))
+        if rep is None:
+            # Child died (or hung) mid-resize.  Roll the bookkeeping back to
+            # the old range so the retry restarts at the original size, and
+            # surface the death as a normal trial ERROR — _sync_exchange
+            # swallowed the pipe-EOF event, so publish it here.
+            ws.dead = True
+            self._unswap_slice(trial, old_res, old_sl, new_sl)
+            self.bus.publish(TrialEvent(
+                EventType.ERROR, trial.trial_id,
+                error=(f"worker for {trial.trial_id} died during RESIZE "
+                       f"({old_sl.size} -> {new_devices} devices); restart "
+                       "from the boundary checkpoint is governed by "
+                       "max_failures")))
+            return False
+        if not rep[1]:  # child kept the old trainable; fall back to old slice
+            self._unswap_slice(trial, old_res, old_sl, new_sl)
+            return False
+        # No credit top-up: the window maintains itself.  STEPs sent = initial
+        # k + one per consumed CONTINUE, so at this boundary (outstanding 0)
+        # exactly k results sit un-consumed, and each of their resumes will
+        # kick one STEP — granting more here would inflate the window past k.
+        return True
 
     def pause_trial(self, trial: Trial) -> None:
         ws = self._workers.get(trial.trial_id)

@@ -41,6 +41,7 @@ class TrialRunner:
         max_pending_from_searcher: int = 0,  # 0 = unlimited
         max_failures: int = 0,               # per-trial restarts-from-checkpoint
         max_experiment_failures: int = 0,    # 0 = unlimited errored trials
+        broker: Optional[Any] = None,        # elastic.ResourceBroker (DESIGN.md §6)
     ):
         self.scheduler = scheduler
         self.executor = executor
@@ -58,6 +59,11 @@ class TrialRunner:
         self._suggest_counter = itertools.count()
         self.n_errors = 0
         self.n_restarts = 0
+        self.broker = broker
+        if broker is not None:
+            # Installs the effective lookahead on the executor (clamped to 1
+            # unless the scheduler declares decision_interval() == 0).
+            broker.bind(self)
 
     # -- trial management ------------------------------------------------------
     def add_trial(self, trial: Trial) -> None:
@@ -165,10 +171,13 @@ class TrialRunner:
         trial = self.get_trial(event.trial_id)
         if trial is None:  # event for a trial this runner never adopted
             return not self.is_finished()
+        if self.broker is not None:
+            self.broker.observe(self, event)
 
-        if event.type in (EventType.CHECKPOINTED, EventType.HEARTBEAT_MISSED,
-                          EventType.RESTARTED, EventType.KILLED):
-            # Observability events: no scheduler decision, just the loggers.
+        if event.type not in (EventType.RESULT, EventType.ERROR):
+            # Observability events (CHECKPOINTED / HEARTBEAT_MISSED /
+            # RESTARTED / KILLED / RESIZED / ...): no scheduler decision,
+            # just the loggers.
             self.logger.on_event(trial, event)
             return not self.is_finished()
 
@@ -239,6 +248,11 @@ class TrialRunner:
 
     def _apply(self, trial: Trial, decision: SchedulerDecision) -> None:
         if decision == SchedulerDecision.CONTINUE:
+            if self.broker is not None:
+                # Checkpoint boundary: the trial's worker is parked awaiting
+                # this resume, so the broker may resize its slice here
+                # (DESIGN.md §6) before the gate re-opens.
+                self.broker.before_resume(self, trial)
             self.executor.resume_trial(trial)
             return
         if decision == SchedulerDecision.PAUSE:

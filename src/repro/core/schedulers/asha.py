@@ -66,12 +66,18 @@ class AsyncHyperBandScheduler(TrialScheduler):
         if grace_period < 1 or max_t < grace_period:
             raise ValueError("need 1 <= grace_period <= max_t")
         self.max_t = max_t
+        self.grace_period = grace_period  # rung-survival signal (elastic GreedyFill)
         self._brackets = [
             _Bracket(grace_period, max_t, reduction_factor, s) for s in range(brackets)
         ]
         self._trial_bracket: Dict[str, int] = {}
         self._rng = np.random.default_rng(0)
         self.n_stopped = 0
+
+    def decision_interval(self) -> int:
+        # Any result can be a rung arrival (milestones are per-bracket), so a
+        # stop may be issued on every report: exact mode needs lookahead 1.
+        return 1
 
     def on_trial_add(self, runner, trial: Trial) -> None:
         # Softmax-free sizing: weight brackets by number of rungs (as in ASHA).

@@ -43,6 +43,20 @@ class TrialScheduler:
     def _score(self, value: float) -> float:
         return value if self.mode == "max" else -value
 
+    def decision_interval(self) -> int:
+        """Decision granularity: how many results may elapse between decisions
+        that can stop, pause, or perturb a trial.
+
+        ``0`` means *never* — the scheduler runs every trial to its stopping
+        condition (FIFO), so workers may run unbounded result lookahead
+        without changing any decision.  ``n >= 1`` means the scheduler may act
+        on any result (1) or on every n-th result per trial; the elastic
+        tier's ``ResourceBroker`` preserves exactness by clamping lookahead
+        credits to 1 whenever the interval is nonzero (DESIGN.md §6).
+        Conservative default: 1.
+        """
+        return 1
+
     # -- lifecycle events -------------------------------------------------------
     def on_trial_add(self, runner: "TrialRunner", trial: Trial) -> None:
         pass

@@ -11,4 +11,7 @@ __all__ = ["FIFOScheduler"]
 
 
 class FIFOScheduler(TrialScheduler):
-    pass
+    def decision_interval(self) -> int:
+        # Never stops/pauses/perturbs: every decision is CONTINUE, so workers
+        # may run unbounded result lookahead without changing semantics.
+        return 0

@@ -87,6 +87,11 @@ class HyperBandScheduler(TrialScheduler):
         self._promote: List[str] = []  # trial_ids cleared to resume after a cut
         self.n_stopped = 0
 
+    def decision_interval(self) -> int:
+        # Synchronous halving pauses trials at bracket milestones; any result
+        # may be the milestone arrival, so exact mode needs lookahead 1.
+        return 1
+
     # -- bracket assignment -----------------------------------------------------
     def _open_bracket(self) -> _SyncBracket:
         b = _SyncBracket(self._next_s, self.s_max, self.max_t, self.eta)

@@ -34,6 +34,11 @@ class MedianStoppingRule(TrialScheduler):
         self._scores: Dict[str, List[float]] = {}
         self.n_stopped = 0
 
+    def decision_interval(self) -> int:
+        # May stop a trial on any post-grace result: exact mode needs
+        # lookahead 1.
+        return 1
+
     def _running_avg(self, trial_id: str, upto: int) -> float:
         scores = self._scores[trial_id][:upto]
         return float(np.mean(scores)) if scores else float("-inf")

@@ -47,6 +47,15 @@ class PopulationBasedTraining(TrialScheduler):
         self._last_perturb: Dict[str, int] = {}
         self.n_exploits = 0
 
+    def decision_interval(self) -> int:
+        # Exploit/explore fires only once a trial has advanced
+        # perturbation_interval iterations past its last perturbation — the
+        # declared granularity.  The broker still clamps lookahead to 1 for
+        # exactness (a nonzero interval means decisions exist); the value is
+        # surfaced so observability (CREDITS events) records how much slack a
+        # future bounded-staleness mode could exploit.
+        return max(1, int(self.perturbation_interval))
+
     # -- explore ------------------------------------------------------------------
     def _explore(self, config: Dict[str, Any]) -> Dict[str, Any]:
         from ..search.space import Domain, Categorical

@@ -16,11 +16,16 @@ Three pieces:
   ``register_worker_factory``/``resolve_worker_factory`` is the process-tier
   registry mirroring ``register_trainable``.
 - The command protocol — parent sends ``STEP`` / ``SAVE`` / ``RESTORE`` /
-  ``RESET_CONFIG`` / ``STOP``; the child replies ``READY`` / ``RESULT`` /
-  ``CHECKPOINTED`` / ``SAVED`` / ``RESTORED`` / ``RESET`` / ``STOPPED`` /
-  ``ERROR``.  Checkpoint **bytes** (``checkpoint.tree_to_bytes``) travel
-  through the spill surface of an ``ObjectStore`` both sides point at — only
-  keys cross the pipe, and no live JAX object is ever pickled.
+  ``RESET_CONFIG`` / ``RESIZE`` / ``STOP``; the child replies ``READY`` /
+  ``RESULT`` / ``CHECKPOINTED`` / ``SAVED`` / ``RESTORED`` / ``RESET`` /
+  ``RESIZED`` / ``STOPPED`` / ``ERROR``.  Checkpoint **bytes**
+  (``checkpoint.tree_to_bytes``) travel through the spill surface of an
+  ``ObjectStore`` both sides point at — only keys cross the pipe, and no live
+  JAX object is ever pickled.  ``RESIZE`` rebuilds the trainable in place
+  over a new mesh slice (elastic tier, DESIGN.md §6) without paying a
+  process teardown; the parent may also queue up to *k* STEP commands at
+  once (lookahead credits) — the pipe itself is the resume gate, so a
+  queued STEP costs the child no round-trip wait.
 - ``ProcessWorker`` — the parent-side handle: spawn, thread-safe send, kill,
   join.  The child is started with the ``spawn`` method (fork is unsafe once
   JAX/XLA threads exist) and is a daemon, so a dying host reaps its workers.
@@ -46,7 +51,8 @@ from .object_store import ObjectStore
 __all__ = [
     "TrainableFactory", "register_worker_factory", "resolve_worker_factory",
     "factory_from_class", "ProcessWorker",
-    "CMD_STEP", "CMD_SAVE", "CMD_RESTORE", "CMD_RESET_CONFIG", "CMD_STOP",
+    "CMD_STEP", "CMD_SAVE", "CMD_RESTORE", "CMD_RESET_CONFIG", "CMD_RESIZE",
+    "CMD_STOP",
 ]
 
 # parent -> child commands
@@ -54,6 +60,7 @@ CMD_STEP = "STEP"
 CMD_SAVE = "SAVE"
 CMD_RESTORE = "RESTORE"
 CMD_RESET_CONFIG = "RESET_CONFIG"
+CMD_RESIZE = "RESIZE"
 CMD_STOP = "STOP"
 
 # child -> parent messages
@@ -63,6 +70,7 @@ MSG_CHECKPOINTED = "CHECKPOINTED"
 MSG_SAVED = "SAVED"
 MSG_RESTORED = "RESTORED"
 MSG_RESET = "RESET"
+MSG_RESIZED = "RESIZED"
 MSG_STOPPED = "STOPPED"
 MSG_ERROR = "ERROR"
 
@@ -165,9 +173,10 @@ def _consume_key(store: ObjectStore, key: str) -> None:
 def _child_main(conn, spec: Dict[str, Any]) -> None:
     """Worker process entry: build the trainable, then serve the command loop.
 
-    Every reply is sent before blocking on the next command, and the child
-    never has more than one un-consumed RESULT outstanding — the parent's
-    resume gate is simply "don't send STEP yet".
+    Every reply is sent before blocking on the next command; the parent's
+    resume gate is simply "don't send STEP yet", and lookahead credits are
+    simply "queue up to k STEPs" — the child itself never changes behavior,
+    it just stops idling between a RESULT and the next command.
     """
     trial_id = spec["trial_id"]
     checkpoint_freq = int(spec.get("checkpoint_freq", 0))
@@ -207,21 +216,81 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
         key = f"ckpt/{trial_id}/{trainable.iteration}.{os.getpid()}.{next(save_seq)}"
         return store.put_spilled(data, key=key)
 
+    done_seen = False
+    queued_steps = 0
+    stashed = None  # one control command held back behind queued STEPs
     try:
         while True:
-            msg = conn.recv()
+            # Lookahead credits queue STEPs in the pipe; count them instead
+            # of executing on receipt.  A STOP sent behind k-1 credited STEPs
+            # preempts them (teardown beats doomed compute), but every OTHER
+            # control command keeps FIFO order with the queued STEPs: a SAVE
+            # must observe the state *after* the steps queued before it —
+            # the parent relies on that drain-barrier during a resize, and
+            # jumping the queue would make the later RESTORE rewind results
+            # already produced (duplicate iterations).
+            msg = None
+            while msg is None:
+                if stashed is not None and not queued_steps:
+                    msg, stashed = stashed, None
+                    break
+                if queued_steps and not conn.poll(0):
+                    queued_steps -= 1
+                    if done_seen:
+                        # Credits queued behind a final result: stepping a
+                        # finished trainable would be an error; drop them.
+                        continue
+                    try:
+                        metrics = dict(trainable.train())
+                        done = bool(metrics.pop("done", False))
+                        if (checkpoint_freq and not done
+                                and trainable.iteration % checkpoint_freq == 0):
+                            conn.send((MSG_CHECKPOINTED, _save_bytes(),
+                                       trainable.iteration))
+                    except Exception:  # noqa: BLE001 — trial, not framework, error
+                        conn.send((MSG_ERROR, traceback.format_exc()))
+                        return
+                    done_seen = done
+                    conn.send((MSG_RESULT, trainable.iteration, metrics, done))
+                    continue
+                nxt = conn.recv()
+                if nxt[0] == CMD_STEP:
+                    queued_steps += 1
+                elif nxt[0] == CMD_STOP or not queued_steps:
+                    msg = nxt
+                else:
+                    stashed = nxt  # at most one: sync exchanges are serial
+            # Only control commands reach the dispatch: the receive loop
+            # above counts STEPs into queued_steps and never yields one.
             cmd = msg[0]
-            if cmd == CMD_STEP:
+            if cmd == CMD_RESIZE:
+                # Elastic slice resize (DESIGN.md §6): rebuild the trainable
+                # over the new mesh window and restore the just-saved state —
+                # all inside this warm process, no teardown.  Failure is
+                # NON-fatal: the old trainable keeps serving and the parent
+                # rolls the pool back (trial falls back to its old slice).
+                _, new_config, key, iteration = msg
+                resized = None
                 try:
-                    metrics = dict(trainable.train())
-                    done = bool(metrics.pop("done", False))
-                    if (checkpoint_freq and not done
-                            and trainable.iteration % checkpoint_freq == 0):
-                        conn.send((MSG_CHECKPOINTED, _save_bytes(), trainable.iteration))
-                except Exception:  # noqa: BLE001 — trial error, not framework error
-                    conn.send((MSG_ERROR, traceback.format_exc()))
-                    return
-                conn.send((MSG_RESULT, trainable.iteration, metrics, done))
+                    state = _decode_state(store.get(key))
+                    resized = cls(dict(new_config))
+                    resized.restore(state)
+                    resized.iteration = int(iteration)
+                except Exception:  # noqa: BLE001 — keep the old trainable
+                    if resized is not None:  # built but failed to restore
+                        try:
+                            resized.cleanup()
+                        except Exception:  # noqa: BLE001
+                            pass
+                    conn.send((MSG_RESIZED, False, traceback.format_exc()))
+                else:
+                    old = trainable
+                    trainable = resized
+                    try:
+                        old.cleanup()
+                    except Exception:  # noqa: BLE001
+                        pass
+                    conn.send((MSG_RESIZED, True, None))
             elif cmd == CMD_SAVE:
                 try:
                     conn.send((MSG_SAVED, _save_bytes(), trainable.iteration))

@@ -1,7 +1,8 @@
 """Distributed hyperparameter search launcher — the paper's workload.
 
     PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
-        --scheduler asha --num-samples 16 --max-iters 20 --executor concurrent
+        --scheduler asha --num-samples 16 --max-iters 20 --executor concurrent \
+        --elastic greedy
 
 Runs a Tune experiment over a model's optimizer hyperparameters with any of
 the six built-in schedulers, optionally driven by a searcher (TPE/random),
@@ -13,6 +14,12 @@ GIL-free host stepping, checkpoint bytes over the ObjectStore spill surface,
 and kill-on-straggle reclamation after ``--straggler-deadline`` seconds), or
 ``vmap`` (homogeneous sweeps as one SPMD program).  ``--max-failures``
 restarts a crashed trial from its last checkpoint.
+
+``--elastic greedy`` turns on the elastic control plane (DESIGN.md §6):
+slices of early-stopped trials are absorbed by survivors at their next
+checkpoint boundary (``fair`` rebalances instead); ``--lookahead K`` lets
+workers run K results ahead of the scheduler on throughput-bound FIFO
+sweeps (auto-clamped to 1 for schedulers that stop/perturb trials).
 """
 from __future__ import annotations
 
@@ -119,6 +126,19 @@ def main() -> None:
                          "a straggling worker is SIGKILLed, its slice returned "
                          "to the pool, and the trial requeued from its last "
                          "checkpoint under --max-failures (0 disables)")
+    ap.add_argument("--elastic", default="off",
+                    choices=["off", "greedy", "fair"],
+                    help="elastic slice resize at checkpoint boundaries: "
+                         "'greedy' grows survivors into capacity freed by "
+                         "early-stopped trials, 'fair' rebalances the pool "
+                         "across running trials (needs a slice pool; no-op "
+                         "with --executor vmap)")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="max un-consumed results a worker may run ahead of "
+                         "the scheduler (saves a control-plane round-trip per "
+                         "step for process workers); automatically clamped to "
+                         "1 unless the scheduler never stops/perturbs trials "
+                         "(fifo)")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -170,6 +190,8 @@ def main() -> None:
         max_experiment_failures=args.max_experiment_failures,
         heartbeat_timeout=args.heartbeat_timeout,
         straggler_deadline=args.straggler_deadline,
+        elastic=args.elastic,
+        lookahead=args.lookahead,
         log_dir=args.log_dir,
         verbose=True,
         seed=args.seed,

@@ -18,6 +18,7 @@ import time
 from repro.core.api import Trainable
 
 __all__ = ["Counter", "LrCounter", "CrashOnce", "HangOnce", "Sleeper",
+           "SliceCounter", "GrowAllergic",
            "train_fn", "make_function_trainable"]
 
 
@@ -125,6 +126,53 @@ class HangOnce(Trainable):
                 f.write("hanging")
             time.sleep(self.hang_s)  # SIGKILL arrives mid-sleep
         return {"loss": 1.0 / self.n}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+
+class SliceCounter(Trainable):
+    """Counter that reports the mesh-slice size it was built over — the
+    elastic-resize fixture: after a broker resize the rebuilt instance sees
+    the new ``_slice``, while ``n`` must survive the SAVE/RESTORE hop."""
+
+    def setup(self, config):
+        self.n = 0
+
+    def step(self):
+        self.n += 1
+        sl = self.config.get("_slice")
+        return {"loss": 1.0 / self.n, "n": self.n,
+                "devices": sl.size if sl is not None else 0}
+
+    def save(self):
+        return {"n": self.n}
+
+    def restore(self, state):
+        self.n = state["n"]
+
+
+class GrowAllergic(Trainable):
+    """Refuses to build over more than ``max_ok`` devices — the resize-
+    fallback fixture: the rebuild half of a grow fails, the executor must
+    roll back to the old slice and the trial must finish unharmed."""
+
+    def setup(self, config):
+        sl = config.get("_slice")
+        max_ok = int(config.get("max_ok", 2))
+        if sl is not None and sl.size > max_ok:
+            raise RuntimeError(
+                f"injected rebuild failure: {sl.size} devices > max_ok={max_ok}")
+        self.n = 0
+
+    def step(self):
+        self.n += 1
+        sl = self.config.get("_slice")
+        return {"loss": 1.0 / self.n,
+                "devices": sl.size if sl is not None else 0}
 
     def save(self):
         return {"n": self.n}

@@ -22,13 +22,13 @@ class TestSlicePoolFragmentation:
         a = pool.acquire(4)
         b = pool.acquire(4)
         c = pool.acquire(8)
-        pool.release(b)  # hole [4, 8)
-        assert pool.fragments == 1 and pool.n_free == 4
+        pool.release(b)  # hole [4, 8) — a single free range, still healthy
+        assert pool.fragments() == 0 and pool.n_free == 4
         d = pool.acquire(4)
         assert d.start == b.start  # first-fit lands in the hole
         for s in (a, c, d):
             pool.release(s)
-        assert pool.fragments == 1 and pool.can_fit(16)
+        assert pool.fragments() == 0 and pool.can_fit(16)
 
     def test_fragmented_pool_rejects_contiguous_request(self):
         """6 free devices split 2+4 cannot host a 6-wide slice."""
@@ -41,10 +41,12 @@ class TestSlicePoolFragmentation:
         assert pool.n_free == 6
         assert not pool.can_fit(6)
         assert pool.can_fit(4)
+        assert pool.fragments() == 1  # one hole: free space split 2 + 4
+        assert pool.largest_free_block() == 4
         with pytest.raises(RuntimeError):
             pool.acquire(6)
         pool.release(b)  # middle slice returns -> full coalesce
-        assert pool.fragments == 1
+        assert pool.fragments() == 0
         assert pool.acquire(8).size == 8
 
     def test_double_release_rejected(self):
@@ -76,7 +78,7 @@ class TestSlicePoolFragmentation:
                     assert h.start + h.size <= start or start + size <= h.start
         for h in held:
             pool.release(h)
-        assert pool.n_free == 64 and pool.fragments == 1
+        assert pool.n_free == 64 and pool.fragments() == 0
 
     def test_balanced_mesh_shape(self):
         assert balanced_shape(8, 1) == (8,)
