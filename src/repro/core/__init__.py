@@ -6,6 +6,8 @@ six built-in algorithms of Table 1).
 """
 from .api import FunctionHandle, FunctionTrainable, Trainable, wrap_function
 from .checkpoint import CheckpointManager, load_pytree, save_pytree, tree_from_bytes, tree_to_bytes
+from .clock import (Clock, VirtualClock, WallClock, get_default_clock,
+                    set_default_clock, use_clock)
 from .experiment import (ExperimentAnalysis, load_experiment_state,
                          register_trainable, run_experiments)
 from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Logger
@@ -37,6 +39,8 @@ __all__ = [
     "Trainable", "FunctionTrainable", "FunctionHandle", "wrap_function",
     "run_experiments", "register_trainable", "ExperimentAnalysis",
     "load_experiment_state",
+    "Clock", "WallClock", "VirtualClock",
+    "get_default_clock", "set_default_clock", "use_clock",
     "Trial", "TrialStatus", "Result", "Checkpoint",
     "TrialRunner", "TrialExecutor", "SerialMeshExecutor", "BusDrivenExecutor",
     "ConcurrentMeshExecutor", "ProcessMeshExecutor",

@@ -36,12 +36,12 @@ manager (serialized by ``_ckpt_lock``).  ``ws.lock`` guards the trainable so
 from __future__ import annotations
 
 import threading
-import time
 import traceback
 from typing import Any, Callable, Dict, Optional
 
 from .api import Trainable
 from .checkpoint import CheckpointManager
+from .clock import Clock
 from .events import EventBus, EventType, TrialEvent
 from .executor import BusDrivenExecutor
 from .trial import Checkpoint, Result, Trial, TrialStatus
@@ -52,18 +52,21 @@ __all__ = ["ConcurrentMeshExecutor"]
 class _WorkerState:
     """Per-trial worker bookkeeping; one instance per (re)launched thread."""
 
-    def __init__(self, trial: Trial, trainable: Trainable, credits: int = 1):
+    def __init__(self, trial: Trial, trainable: Trainable, clock: Clock,
+                 credits: int = 1):
         self.trial = trial
         self.trainable = trainable
         self.thread: Optional[threading.Thread] = None
         # Credit-counting resume gate (DESIGN.md §6): each credit is one step
         # the runner has granted.  credits=1 is exactly PR 2's binary gate —
         # at most one un-consumed result per trial; k>1 lets the worker run
-        # ahead for run-to-completion schedulers.
-        self.credits = threading.Semaphore(credits)
+        # ahead for run-to-completion schedulers.  The semaphore comes from
+        # the clock so a parked worker is visible to virtual time (§7).
+        self.credits = clock.semaphore(credits)
         self.granted = credits            # runner-thread writes only
         self.published = 0                # worker-thread writes only
-        self.stop = threading.Event()     # runner halt request
+        self.stop = threading.Event()     # runner halt request (checked, never waited)
+        self.registered = threading.Event()  # thread joined the clock's roster
         self.lock = threading.Lock()      # guards the trainable
         self.in_step = False
         self.step_started = 0.0
@@ -92,21 +95,39 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         heartbeat_timeout: float = 60.0,   # <=0 disables the monitor
         event_bus: Optional[EventBus] = None,
         join_timeout: float = 10.0,
+        clock: Optional[Clock] = None,
     ):
         super().__init__(trainable_cls_resolver, checkpoint_manager,
                          total_cpu, total_devices, slice_pool, checkpoint_freq,
-                         event_bus=event_bus)
+                         event_bus=event_bus, clock=clock)
         self.heartbeat_timeout = heartbeat_timeout
         self.join_timeout = join_timeout
         self._event_wait_bound = max(60.0, join_timeout)
         self._ckpt_lock = threading.Lock()  # CheckpointManager/ObjectStore access
-        self._shutdown_evt = threading.Event()
+        self._shutdown_evt = self.clock.event()
         if heartbeat_timeout and heartbeat_timeout > 0:
+            ready = threading.Event()
             self._monitor_thread = threading.Thread(
-                target=self._monitor, name="repro-heartbeat", daemon=True)
+                target=self._monitor, args=(ready,),
+                name="repro-heartbeat", daemon=True)
             self._monitor_thread.start()
+            # Wait out the roster handshake so virtual time can never advance
+            # while the monitor is still booting (its interval phase would
+            # drift nondeterministically otherwise).  Microseconds in real
+            # time; the monitor has not parked yet so this cannot block long.
+            if not ready.wait(timeout=10.0):
+                raise RuntimeError(
+                    "heartbeat monitor failed to enroll with the clock "
+                    "within 10s")
 
     # -- worker loop ----------------------------------------------------------------
+    def _worker_main(self, ws: _WorkerState) -> None:
+        """Thread body: enroll in the clock roster (virtual time only advances
+        when every enrolled thread is parked in a clock primitive), then run."""
+        with self.clock.running():
+            ws.registered.set()
+            self._run_worker(ws)
+
     def _run_worker(self, ws: _WorkerState) -> None:
         trial_id = ws.trial.trial_id
         while True:
@@ -117,7 +138,7 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
             if ws.stop.is_set():
                 return
             with ws.lock:
-                ws.step_started = time.time()
+                ws.step_started = self.clock.monotonic()
                 ws.in_step = True
                 try:
                     metrics = ws.trainable.train()
@@ -140,6 +161,7 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                 training_iteration=ws.trainable.iteration,
                 metrics=metrics,
                 done=done,
+                timestamp=self.clock.time(),
             )
             if (
                 self.checkpoint_freq
@@ -163,17 +185,19 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
             if done:
                 return  # the runner will stop_trial on the final result
 
-    def _monitor(self) -> None:
+    def _monitor(self, ready: threading.Event) -> None:
         interval = max(0.05, min(1.0, self.heartbeat_timeout / 4))
-        while not self._shutdown_evt.wait(interval):
-            now = time.time()
-            for ws in list(self._workers.values()):
-                stalled = ws.in_step and now - ws.step_started > self.heartbeat_timeout
-                if stalled and now - ws.last_warned > self.heartbeat_timeout:
-                    ws.last_warned = now
-                    self.bus.publish(TrialEvent(
-                        EventType.HEARTBEAT_MISSED, ws.trial.trial_id,
-                        info={"stalled_s": round(now - ws.step_started, 3)}))
+        with self.clock.running():
+            ready.set()
+            while not self._shutdown_evt.wait(interval):
+                now = self.clock.monotonic()
+                for ws in list(self._workers.values()):
+                    stalled = ws.in_step and now - ws.step_started > self.heartbeat_timeout
+                    if stalled and now - ws.last_warned > self.heartbeat_timeout:
+                        ws.last_warned = now
+                        self.bus.publish(TrialEvent(
+                            EventType.HEARTBEAT_MISSED, ws.trial.trial_id,
+                            info={"stalled_s": round(now - ws.step_started, 3)}))
 
     # -- lifecycle ------------------------------------------------------------------
     def _spawn(self, trial: Trial, trainable: Trainable,
@@ -181,14 +205,23 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         # A fresh trial starts with the full lookahead grant; a worker
         # respawned mid-decision (resize) starts with 0 — the k un-consumed
         # results' CONTINUEs re-grant the window one resume at a time.
-        ws = _WorkerState(trial, trainable,
+        ws = _WorkerState(trial, trainable, self.clock,
                           credits=self.lookahead if credits is None else credits)
         ws.thread = threading.Thread(
-            target=self._run_worker, args=(ws,),
+            target=self._worker_main, args=(ws,),
             name=f"repro-worker-{trial.trial_id}", daemon=True)
         self._workers[trial.trial_id] = ws
         trial.set_status(TrialStatus.RUNNING)
         ws.thread.start()
+        # Roster handshake (see _worker_main): once start_trial returns, the
+        # worker counts toward the virtual clock's all-parked check, so time
+        # can never advance "around" a thread that is still booting.  A
+        # timeout here is pathological (thread never started registering) —
+        # fail loudly rather than run with silently nondeterministic time.
+        if not ws.registered.wait(timeout=10.0):
+            raise RuntimeError(
+                f"worker thread for {trial.trial_id} failed to enroll with "
+                "the clock within 10s")
 
     def _acquire_and_build(
         self, trial: Trial, state: Any = None, iteration: int = 0
@@ -239,8 +272,10 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         ws.stop.set()
         ws.credits.release()  # wake a parked worker; it re-checks stop first
         if ws.thread is not None and ws.thread.is_alive():
-            ws.thread.join(timeout=self.join_timeout)
-            return not ws.thread.is_alive()
+            # clock.join_thread, not thread.join: under virtual time the
+            # worker may be asleep inside its step, and only the clock can
+            # run that sleep down while we wait.
+            return self.clock.join_thread(ws.thread, timeout=self.join_timeout)
         return True
 
     def _reap(self, trial: Trial) -> Optional[_WorkerState]:
@@ -273,8 +308,18 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
 
     def save_checkpoint(self, trial: Trial) -> Checkpoint:
         ws = self._workers[trial.trial_id]
-        with ws.lock:
+        # Never block bare on ws.lock: a worker mid-step holds it while
+        # parked in clock.sleep, and a runnable-but-OS-blocked runner would
+        # freeze virtual time (the worker's step could then never finish).
+        # Pacing the acquisition through the clock lets virtual time run the
+        # in-flight step down while we wait; on the wall clock the contended
+        # path degrades to a 5ms poll of a lock held for a full step anyway.
+        while not ws.lock.acquire(blocking=False):
+            self.clock.sleep(0.005)
+        try:
             return self._save_locked(ws)
+        finally:
+            ws.lock.release()
 
     # -- runner-driven transitions -------------------------------------------------
     def resume_trial(self, trial: Trial) -> None:
@@ -382,4 +427,4 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         for trial_id in list(self._workers):
             self._reap(self._workers[trial_id].trial)
         if self._monitor_thread is not None and self._monitor_thread.is_alive():
-            self._monitor_thread.join(timeout=2.0)
+            self.clock.join_thread(self._monitor_thread, timeout=2.0)

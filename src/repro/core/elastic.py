@@ -33,6 +33,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional, TYPE_CHECKING
 
+from .clock import Clock, get_default_clock
 from .events import EventType, TrialEvent
 from .trial import Trial, TrialStatus
 
@@ -158,11 +159,12 @@ class ResourceBroker:
     """
 
     def __init__(self, policy: Optional[ResizePolicy] = None,
-                 lookahead: int = 1):
+                 lookahead: int = 1, clock: Optional[Clock] = None):
         if lookahead < 1:
             raise ValueError(f"lookahead must be >= 1, got {lookahead}")
         self.policy = policy
         self.lookahead = int(lookahead)
+        self.clock = clock  # None = adopt the executor's clock at bind()
         self.effective_lookahead = 1
         self.decision_interval = 1
         self.n_resized = 0
@@ -174,6 +176,11 @@ class ResourceBroker:
     # -- wiring ---------------------------------------------------------------------
     def bind(self, runner: "TrialRunner") -> None:
         self._runner = runner
+        if self.clock is None:
+            # The broker's CREDITS/RESIZED events go straight to the loggers
+            # (never through a bus that would stamp them), so they must share
+            # the executor's time axis to sort against bus events.
+            self.clock = getattr(runner.executor, "clock", None) or get_default_clock()
         self.decision_interval = int(runner.scheduler.decision_interval())
         # Exactness rule: any scheduler that can stop/pause/perturb (nonzero
         # interval) gets k=1, so every decision is made on a parked worker and
@@ -202,7 +209,8 @@ class ResourceBroker:
                 EventType.CREDITS, trial.trial_id,
                 info={"requested": self.lookahead,
                       "granted": self.effective_lookahead,
-                      "decision_interval": self.decision_interval}))
+                      "decision_interval": self.decision_interval},
+                timestamp=self.clock.time()))
         if self.policy is None:
             return
         ex = runner.executor
@@ -224,11 +232,13 @@ class ResourceBroker:
         if ok:
             self.n_resized += 1
             runner.logger.on_event(trial, TrialEvent(
-                EventType.RESIZED, trial.trial_id, info=info))
+                EventType.RESIZED, trial.trial_id, info=info,
+                timestamp=self.clock.time()))
         else:
             self.n_resize_failed += 1
             runner.logger.on_event(trial, TrialEvent(
-                EventType.RESIZE_FAILED, trial.trial_id, info=info))
+                EventType.RESIZE_FAILED, trial.trial_id, info=info,
+                timestamp=self.clock.time()))
 
     def debug_string(self) -> str:
         return (f"ResourceBroker(policy={self.policy.name if self.policy else 'off'}, "

@@ -22,10 +22,10 @@ import enum
 import itertools
 import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from .clock import Clock, get_default_clock
 from .trial import Checkpoint, Result
 
 __all__ = ["EventType", "TrialEvent", "EventBus"]
@@ -51,7 +51,10 @@ class TrialEvent:
     error: Optional[str] = None            # ERROR (formatted traceback)
     checkpoint: Optional[Checkpoint] = None  # CHECKPOINTED
     info: Dict[str, Any] = field(default_factory=dict)
-    timestamp: float = field(default_factory=time.time)
+    # Stamped by the bus on publish (or by whoever hands the event straight
+    # to a logger); None = "not yet stamped", loggers fall back to their own
+    # clock so an unstamped event still gets a usable time.
+    timestamp: Optional[float] = None
     seq: int = -1                          # assigned by the bus on publish
 
 
@@ -62,27 +65,36 @@ class EventBus:
     single consumer (the runner's event loop).  ``publish`` holds one lock
     across seq assignment *and* enqueue, so ``seq`` order equals delivery
     order even under concurrent publishers.
+
+    All timing runs through the injected ``Clock`` (DESIGN.md §7): publish
+    stamps ``event.timestamp`` from it, blocking ``get`` parks through it (so
+    a consumer on a ``VirtualClock`` wakes in virtual time), and publish
+    ``kick``s the clock so parked virtual waiters re-check the queue.
     """
 
-    def __init__(self, maxsize: int = 0):
+    def __init__(self, maxsize: int = 0, clock: Optional[Clock] = None):
         self._q: "queue.Queue[TrialEvent]" = queue.Queue(maxsize=maxsize)
         self._lock = threading.Lock()
         self._seq = itertools.count()
+        self.clock = clock or get_default_clock()
         self.n_published = 0
 
     def publish(self, event: TrialEvent) -> TrialEvent:
         with self._lock:
             event.seq = next(self._seq)
+            if event.timestamp is None:
+                event.timestamp = self.clock.time()
             self._q.put(event)
             self.n_published += 1
+        self.clock.kick(self._q)  # wake a virtual consumer parked on this queue
         return event
 
     def get(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
         """Next event, or None after ``timeout`` seconds (None = non-blocking)."""
+        if timeout is not None:
+            return self.clock.queue_get(self._q, timeout)
         try:
-            if timeout is None:
-                return self._q.get_nowait()
-            return self._q.get(timeout=timeout)
+            return self._q.get_nowait()
         except queue.Empty:
             return None
 

@@ -11,13 +11,13 @@ trial a sub-mesh sized to its resource request.
 """
 from __future__ import annotations
 
-import time
 import traceback
 from collections import deque
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from .api import Trainable
 from .checkpoint import CheckpointManager
+from .clock import Clock, get_default_clock
 from .events import EventBus, EventType, TrialEvent
 from .resources import ResourceAccountant, Resources
 from .trial import Checkpoint, Result, Trial, TrialStatus
@@ -122,12 +122,14 @@ class _SlicedExecutor(TrialExecutor):
         total_devices: int = 256,
         slice_pool: Optional[Any] = None,  # dist.submesh.SlicePool
         checkpoint_freq: int = 0,
+        clock: Optional[Clock] = None,
     ):
         self._resolve = trainable_cls_resolver
         self.ckpt = checkpoint_manager
         self.accountant = ResourceAccountant(total_cpu, total_devices)
         self.slice_pool = slice_pool
         self.checkpoint_freq = checkpoint_freq
+        self.clock = clock or get_default_clock()
         self._slices: Dict[str, Any] = {}
 
     def has_resources(self, trial: Trial) -> bool:
@@ -240,7 +242,7 @@ class BusDrivenExecutor(_SlicedExecutor):
 
     def __init__(self, *args, event_bus: Optional[EventBus] = None, **kwargs):
         super().__init__(*args, **kwargs)
-        self.bus = event_bus or EventBus()
+        self.bus = event_bus or EventBus(clock=self.clock)
         self._workers: Dict[str, Any] = {}
         self._monitor_thread: Optional[Any] = None
         self._event_wait_bound = 60.0
@@ -262,10 +264,14 @@ class BusDrivenExecutor(_SlicedExecutor):
         monitor is disabled that guarantee is gone, so the wait is bounded
         (~60s) instead: the runner's stall detector stays reachable and a
         hung step surfaces as a stall error rather than a silent hang.
+
+        Deadline arithmetic runs on ``clock.monotonic()`` — never the wall
+        timestamp axis, which NTP steps or a suspended laptop can jump by
+        hours, silently expiring (or never expiring) a 0.5s wait.
         """
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else self.clock.monotonic() + timeout
         if deadline is None and not self._events_guaranteed():
-            deadline = time.time() + self._event_wait_bound
+            deadline = self.clock.monotonic() + self._event_wait_bound
         while True:
             # _workers is mutated only by this (runner) thread, so the check
             # can't race; block on the queue in long slices instead of polling.
@@ -273,7 +279,7 @@ class BusDrivenExecutor(_SlicedExecutor):
                 return self.bus.get()
             wait = 0.5
             if deadline is not None:
-                wait = min(wait, deadline - time.time())
+                wait = min(wait, deadline - self.clock.monotonic())
                 if wait <= 0:
                     return None
             ev = self.bus.get(timeout=wait)
@@ -423,6 +429,7 @@ class SerialMeshExecutor(_SlicedExecutor):
                 training_iteration=trainable.iteration,
                 metrics=metrics,
                 done=done,
+                timestamp=self.clock.time(),
             )
             if (
                 self.checkpoint_freq

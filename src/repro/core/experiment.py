@@ -170,6 +170,7 @@ def run_experiments(
     metric: Optional[str] = None,
     mode: Optional[str] = None,
     resume: bool = False,
+    clock: Optional[Any] = None,  # repro.core.clock.Clock; None = default
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
 
@@ -197,7 +198,14 @@ def run_experiments(
 
     ``resume=True`` (requires ``log_dir``) restores the trial list of an
     interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
-    kept, interrupted ones continue from their last durable checkpoint."""
+    kept, interrupted ones continue from their last durable checkpoint.
+
+    ``clock`` injects the time source (DESIGN.md §7) into the executor, the
+    event bus, the loggers and the broker in one stroke — a ``VirtualClock``
+    here runs the whole control plane on deterministic virtual time (the
+    repro.testing harness does exactly this)."""
+    from .clock import get_default_clock
+    clock = clock or get_default_clock()
     scheduler = scheduler or FIFOScheduler()
     metric = metric or scheduler.metric
     mode = mode or scheduler.mode
@@ -237,6 +245,7 @@ def run_experiments(
             total_devices=total_devices,
             slice_pool=slice_pool,
             checkpoint_freq=checkpoint_freq,
+            clock=clock,
         )
         if kind == "serial":
             executor = SerialMeshExecutor(**common)
@@ -252,17 +261,18 @@ def run_experiments(
                 f"unknown executor {kind!r}; pass 'serial', 'concurrent', "
                 f"'process', or a TrialExecutor instance (VmapExecutor needs "
                 f"a VectorTrainableSpec)")
-    loggers: List[Logger] = [ConsoleLogger(verbose=verbose)]
+    loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock)]
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
-        loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl")))
+        loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl"),
+                                   clock=clock))
     logger = CompositeLogger(loggers)
 
     broker = None
     if (elastic not in (None, "off")) or lookahead != 1:
         from .elastic import ResourceBroker, resolve_policy
         broker = ResourceBroker(policy=resolve_policy(elastic),
-                                lookahead=lookahead)
+                                lookahead=lookahead, clock=clock)
 
     runner = TrialRunner(
         scheduler=scheduler,

@@ -10,9 +10,9 @@ import csv
 import json
 import os
 import sys
-import time
 from typing import Any, Dict, List, Optional, TextIO
 
+from .clock import Clock, get_default_clock
 from .trial import Result, Trial
 
 __all__ = ["Logger", "ConsoleLogger", "CSVLogger", "JSONLLogger", "CompositeLogger"]
@@ -36,16 +36,21 @@ class Logger:
 
 
 class ConsoleLogger(Logger):
-    def __init__(self, interval_s: float = 5.0, stream: Optional[TextIO] = None, verbose: bool = True):
+    def __init__(self, interval_s: float = 5.0, stream: Optional[TextIO] = None,
+                 verbose: bool = True, clock: Optional[Clock] = None):
         self.interval_s = interval_s
         self.stream = stream or sys.stdout
         self.verbose = verbose
+        self.clock = clock or get_default_clock()
         self._last = 0.0
         self._n_results = 0
 
     def on_result(self, trial: Trial, result: Result) -> None:
         self._n_results += 1
-        now = time.time()
+        # Flush throttling reads the injected clock, so a virtual-time run
+        # prints on virtual seconds (and tests can drive the throttle
+        # deterministically) instead of real-time wall gaps.
+        now = self.clock.time()
         if self.verbose and now - self._last >= self.interval_s:
             self._last = now
             metrics = ", ".join(
@@ -137,8 +142,9 @@ class CSVLogger(Logger):
 
 
 class JSONLLogger(Logger):
-    def __init__(self, path: str):
+    def __init__(self, path: str, clock: Optional[Clock] = None):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.clock = clock or get_default_clock()
         self.f = open(path, "w")
 
     def on_result(self, trial: Trial, result: Result) -> None:
@@ -156,12 +162,18 @@ class JSONLLogger(Logger):
 
     def on_event(self, trial: Trial, event: Any) -> None:
         kind = getattr(event, "type", None)
+        # Events that never crossed a bus (runner-side RESTARTED, the
+        # broker's CREDITS/RESIZED records) arrive unstamped: fall back to
+        # this logger's clock so the JSONL time axis stays consistent.
+        ts = getattr(event, "timestamp", None)
+        if ts is None:
+            ts = self.clock.time()
         self.f.write(json.dumps({
             "event": getattr(kind, "value", str(kind)).lower(),
             "trial_id": trial.trial_id,
             "seq": getattr(event, "seq", -1),
             "info": getattr(event, "info", {}),
-            "t": getattr(event, "timestamp", time.time()),
+            "t": ts,
         }) + "\n")
         self.f.flush()
 

@@ -26,6 +26,14 @@ replies (SAVED/RESTORED/RESET/STOPPED) to the runner-side waiter.  A *monitor
 thread* watches step ages and spawn ages and is the only other place a kill
 originates.  Killing a process from the monitor is safe — resource release
 still happens on the runner thread when it processes the resulting ERROR.
+
+Clock seam (DESIGN.md §7): children are real OS processes, so their pipes
+and the synchronous reply waits stay on *real* time — but all deadline math
+(step/spawn ages, monitor interval, kill escalation) reads the injected
+``Clock``.  Under a ``VirtualClock`` the monitor's straggler arithmetic can
+be fast-forwarded deterministically while the child itself stays wall-bound;
+the pump thread deliberately never registers with the clock (it blocks on
+real child pipes the clock cannot see).
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ import traceback
 from typing import Any, Callable, Dict, Optional
 
 from .checkpoint import CheckpointManager
+from .clock import Clock
 from .events import EventBus, EventType, TrialEvent
 from .executor import BusDrivenExecutor
 from .trial import Checkpoint, Result, Trial, TrialStatus
@@ -52,7 +61,7 @@ __all__ = ["ProcessMeshExecutor"]
 class _WorkerHandle:
     """Per-trial bookkeeping for one worker process."""
 
-    def __init__(self, trial: Trial, worker: ProcessWorker):
+    def __init__(self, trial: Trial, worker: ProcessWorker, clock: Clock):
         self.trial = trial
         self.worker = worker
         self.reply_q: "queue.Queue" = queue.Queue()  # SAVED/RESTORED/RESET/STOPPED
@@ -67,7 +76,7 @@ class _WorkerHandle:
         self.outstanding = 0
         self.ctr_lock = threading.Lock()
         self.step_started = 0.0
-        self.spawned_at = time.time()
+        self.spawned_at = clock.monotonic()
         self.last_warned = 0.0
         self.dead = False      # pipe closed / child exited / ERROR published
         self.killed = False    # we SIGKILLed it (straggler or teardown)
@@ -99,6 +108,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         reply_timeout: float = 30.0,        # synchronous SAVE/RESTORE/RESET waits
         mp_context: Optional[str] = None,   # None = forkserver-preloaded/spawn
         worker_nice: int = 1,               # children yield to the control plane
+        clock: Optional[Clock] = None,      # deadline math only; children stay wall
     ):
         # trainable_cls_resolver is accepted for signature parity with the
         # in-host executors but never used to instantiate: the child rebuilds
@@ -108,7 +118,8 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             checkpoint_manager = CheckpointManager(ObjectStore())
         super().__init__(trainable_cls_resolver or (lambda name: None),
                          checkpoint_manager, total_cpu, total_devices,
-                         slice_pool, checkpoint_freq, event_bus=event_bus)
+                         slice_pool, checkpoint_freq, event_bus=event_bus,
+                         clock=clock)
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_deadline = straggler_deadline
         self.join_timeout = join_timeout
@@ -120,16 +131,27 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         self._owns_spill_dir = self.ckpt.store.spill_dir is None
         self._spill_dir = self.ckpt.store.ensure_spill_dir()
         self._ckpt_lock = threading.Lock()  # CheckpointManager access (pump + runner)
-        self._shutdown_evt = threading.Event()
+        self._shutdown_evt = self.clock.event()
+        # The pump blocks on real child pipes the clock cannot see, so it
+        # needs a real shutdown signal of its own (a virtual event would
+        # require the pump to park through the clock to observe it).
+        self._pump_shutdown = threading.Event()
         self.n_killed = 0
         self._pump_thread = threading.Thread(
             target=self._pump, name="repro-proc-pump", daemon=True)
         self._pump_thread.start()
         # The monitor doubles as the spawn watchdog, so it always runs; the
         # per-feature timeouts (<=0) disable their own escalations only.
+        ready = threading.Event()
         self._monitor_thread = threading.Thread(
-            target=self._monitor, name="repro-proc-monitor", daemon=True)
+            target=self._monitor, args=(ready,),
+            name="repro-proc-monitor", daemon=True)
         self._monitor_thread.start()
+        # Roster handshake (virtual determinism): fail loudly on timeout
+        # rather than let virtual time advance around a booting monitor.
+        if not ready.wait(timeout=10.0):
+            raise RuntimeError(
+                "process monitor failed to enroll with the clock within 10s")
 
     def _events_guaranteed(self) -> bool:
         # An unbounded runner wait is safe only when the monitor covers BOTH
@@ -140,12 +162,12 @@ class ProcessMeshExecutor(BusDrivenExecutor):
 
     # -- pump: child messages -> events / replies -------------------------------------
     def _pump(self) -> None:
-        while not self._shutdown_evt.is_set():
+        while not self._pump_shutdown.is_set():
             handles = {ws.worker.conn: ws
                        for ws in list(self._workers.values())
                        if not ws.dead}
             if not handles:
-                self._shutdown_evt.wait(0.05)
+                self._pump_shutdown.wait(0.05)
                 continue
             try:
                 ready = mp_conn.wait(list(handles), timeout=0.2)
@@ -166,6 +188,9 @@ class ProcessMeshExecutor(BusDrivenExecutor):
                     self.bus.publish(TrialEvent(
                         EventType.ERROR, ws.trial.trial_id,
                         error=traceback.format_exc()))
+            # No clock kick needed here: bus.publish kicks its own queue
+            # channel, and reply_q is consumed by _await_reply's *real*
+            # queue.get (reply latency is real-child latency by design).
 
     def _on_worker_death(self, ws: _WorkerHandle) -> None:
         """Pipe hit EOF: the child exited without a protocol goodbye."""
@@ -205,11 +230,12 @@ class ProcessMeshExecutor(BusDrivenExecutor):
                 ws.in_step = ws.outstanding > 0
                 # One result back = the next queued step begins now; restart
                 # the straggler clock so k queued steps aren't judged as one.
-                ws.step_started = time.time()
+                ws.step_started = self.clock.monotonic()
             self.bus.publish(TrialEvent(
                 EventType.RESULT, trial_id,
                 result=Result(trial_id=trial_id, training_iteration=iteration,
-                              metrics=dict(metrics), done=bool(done))))
+                              metrics=dict(metrics), done=bool(done),
+                              timestamp=self.clock.time())))
         elif kind == _w.MSG_CHECKPOINTED:
             _, key, iteration = msg
             with self._ckpt_lock:
@@ -231,7 +257,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         resume gate re-opened ``n`` results wide).  Pump or runner thread."""
         with ws.ctr_lock:
             if ws.outstanding == 0:
-                ws.step_started = time.time()
+                ws.step_started = self.clock.monotonic()
             for _ in range(max(1, n)):
                 if not ws.worker.send(CMD_STEP):
                     break  # pipe dead; pump will surface the EOF
@@ -239,11 +265,16 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             ws.in_step = ws.outstanding > 0
 
     # -- monitor: heartbeats, spawn watchdog, kill-on-straggle ------------------------
-    def _monitor(self) -> None:
+    def _monitor(self, ready: threading.Event) -> None:
         beats = [t for t in (self.heartbeat_timeout, self.straggler_deadline) if t > 0]
         interval = max(0.05, min([1.0] + [t / 4 for t in beats]))
+        with self.clock.running():
+            ready.set()
+            self._monitor_loop(interval)
+
+    def _monitor_loop(self, interval: float) -> None:
         while not self._shutdown_evt.wait(interval):
-            now = time.time()
+            now = self.clock.monotonic()
             for ws in list(self._workers.values()):
                 if ws.dead or ws.killed or ws.stopping:
                     continue
@@ -337,7 +368,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         # optional restore overlap across trials; the pump sends the first
         # STEP on READY, and a child that errors during build publishes ERROR
         # into the normal retry path.
-        ws = _WorkerHandle(trial, worker)
+        ws = _WorkerHandle(trial, worker, self.clock)
         ws.restore_key = restore_key
         ws.restore_ckpt = checkpoint
         self._workers[trial.trial_id] = ws
@@ -386,10 +417,13 @@ class ProcessMeshExecutor(BusDrivenExecutor):
     def _await_reply(self, ws: _WorkerHandle, tag: str,
                      timeout: Optional[float] = None) -> Optional[tuple]:
         """Wait for a synchronous reply routed by the pump; None on timeout or
-        worker death."""
-        deadline = time.time() + (timeout if timeout is not None else self.reply_timeout)
+        worker death.  Real (monotonic) time on purpose, even under a virtual
+        clock: the reply is produced by a real child process whose latency
+        virtual time cannot model — and monotonic, not wall, so an NTP step
+        can neither strand nor instantly expire the wait."""
+        deadline = time.monotonic() + (timeout if timeout is not None else self.reply_timeout)
         while True:
-            remaining = deadline - time.time()
+            remaining = deadline - time.monotonic()
             if remaining <= 0:
                 return None
             try:
@@ -592,11 +626,13 @@ class ProcessMeshExecutor(BusDrivenExecutor):
 
     def shutdown(self) -> None:
         self._shutdown_evt.set()
+        self._pump_shutdown.set()
         for trial_id in list(self._workers):
             self._reap(self._workers[trial_id].trial)
-        for t in (self._pump_thread, self._monitor_thread):
-            if t is not None and t.is_alive():
-                t.join(timeout=2.0)
+        if self._pump_thread.is_alive():
+            self._pump_thread.join(timeout=2.0)  # real thread, real join
+        if self._monitor_thread is not None and self._monitor_thread.is_alive():
+            self.clock.join_thread(self._monitor_thread, timeout=2.0)
         if self._owns_spill_dir:
             # We mkdtemp'd this dir (the user configured no spill): the
             # checkpoint payloads in it die with the experiment.

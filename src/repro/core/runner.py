@@ -222,9 +222,11 @@ class TrialRunner:
             # PAUSED (restore from last checkpoint) or PENDING (from scratch).
             self.n_restarts += 1
             self.executor.requeue_trial(trial)
+            clock = getattr(self.executor, "clock", None)
             self.logger.on_event(trial, TrialEvent(
                 EventType.RESTARTED, trial.trial_id, error=error,
                 checkpoint=trial.checkpoint,
+                timestamp=clock.time() if clock is not None else None,
                 info={"num_failures": trial.num_failures,
                       "max_failures": self.max_failures,
                       # keep the cause on record even when the retry succeeds

@@ -172,7 +172,18 @@ class HyperBandScheduler(TrialScheduler):
         for t in runner.trials:
             if t.status == TrialStatus.PENDING and runner.has_resources(t):
                 return t
-        # 3. NOT generic paused trials — paused bracket members wait for the cut.
+        # 3. crash-requeued members (max_failures retry): PAUSED *without* a
+        # recorded milestone arrival is not waiting on a cut — it died and was
+        # re-queued by the runner, and nothing else will ever relaunch it.
+        # (Milestone-paused members ARE in bracket.arrived; cut survivors ride
+        # the _promote queue above.)
+        for t in runner.trials:
+            if t.status != TrialStatus.PAUSED or not runner.has_resources(t):
+                continue
+            bracket = self._trial_bracket.get(t.trial_id)
+            if bracket is not None and t.trial_id not in bracket.arrived:
+                return t
+        # NOT generic paused trials — paused bracket members wait for the cut.
         return None
 
     def debug_string(self) -> str:

@@ -16,10 +16,10 @@ from __future__ import annotations
 
 import enum
 import itertools
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from .clock import get_default_clock
 from .resources import Resources
 
 __all__ = ["Trial", "TrialStatus", "Result", "Checkpoint"]
@@ -50,7 +50,9 @@ class Result:
     trial_id: str
     training_iteration: int
     metrics: Dict[str, Any]
-    timestamp: float = field(default_factory=time.time)
+    # Executors stamp results from their injected Clock; the default factory
+    # covers Results built outside an executor (tests, ad-hoc tooling).
+    timestamp: float = field(default_factory=lambda: get_default_clock().time())
     done: bool = False
 
     def value(self, metric: str) -> float:
@@ -137,7 +139,10 @@ class Trial:
         if self.status.is_finished() and status == TrialStatus.RUNNING:
             raise RuntimeError(f"cannot restart finished trial {self.trial_id}")
         if status == TrialStatus.RUNNING and self.start_time is None:
-            self.start_time = time.time()
+            # Trials are constructed by user code long before an executor
+            # exists, so they read the module-default clock rather than an
+            # injected one — use_clock(...) places them on virtual time.
+            self.start_time = get_default_clock().time()
         self.status = status
 
     def __repr__(self) -> str:

@@ -1,0 +1,144 @@
+"""Invariant checkers over a finished ScenarioResult.
+
+Each checker raises AssertionError with a scenario-sized diagnostic; the
+fault-matrix tests call ``check_all``.  Three families:
+
+- resource safety   — the SlicePool and the ResourceAccountant drained back
+                      to empty (no leaked slice, no leaked accounting),
+- event-log health  — per-trial result streams are strictly increasing and
+                      gapless, restart/error/straggler counts reconcile with
+                      the faults the scenario scripted,
+- decision fidelity — a concurrent run on a capacity-1 pool reproduces the
+                      serial executor's statuses/results/decisions exactly
+                      (``check_serial_equivalence`` runs both and compares).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+from ..core.events import EventType
+from ..core.trial import TrialStatus
+from .scenarios import Scenario, ScenarioResult, run_scenario
+
+__all__ = ["check_no_slice_leaks", "check_event_log", "check_fault_accounting",
+           "check_all", "check_serial_equivalence"]
+
+
+def check_no_slice_leaks(result: ScenarioResult) -> None:
+    """Every slice and every accounted resource returned to the pool."""
+    pool = result.pool
+    assert pool.n_free == pool.n_total, (
+        f"{result.scenario.name}: slice leak — {pool.n_total - pool.n_free} "
+        f"devices still held after the run ({pool!r})")
+    assert pool.fragments() == 0, (
+        f"{result.scenario.name}: free list failed to coalesce ({pool!r})")
+    acct = result.executor.accountant
+    assert acct.available.devices == acct.total.devices, (
+        f"{result.scenario.name}: accountant leak — "
+        f"{acct.total.devices - acct.available.devices} devices still booked")
+    assert not result.executor.has_running(), (
+        f"{result.scenario.name}: executor still has live workers")
+
+
+def check_event_log(result: ScenarioResult, gapless: bool = True) -> None:
+    """Per-trial streams are strictly increasing (gapless too, unless the
+    scheduler clones — a PBT exploit legitimately jumps a trial forward to
+    its donor's iteration) and every trial reached a terminal state; all
+    timestamps sit on the virtual axis."""
+    for t in result.trials:
+        iters = [r.training_iteration for r in t.results]
+        assert iters == sorted(set(iters)), (
+            f"{t.trial_id}: result stream not strictly increasing: {iters}")
+        if t.status == TrialStatus.TERMINATED:
+            assert iters, f"{t.trial_id}: terminated with no results"
+            if gapless:
+                assert iters == list(range(1, len(iters) + 1)), (
+                    f"{t.trial_id}: terminated with a gapped stream: {iters}")
+        else:
+            assert t.status == TrialStatus.ERROR, (
+                f"{t.trial_id}: non-terminal status {t.status} after run")
+            assert t.error, f"{t.trial_id}: ERROR status with no error"
+    virtual_end = result.clock.time()
+    for r in result.recorder.results:
+        assert r.timestamp <= virtual_end, (
+            f"result stamped past the virtual clock: {r.timestamp} > {virtual_end}")
+    restarted = result.recorder.of(EventType.RESTARTED)
+    assert len(restarted) == result.runner.n_restarts, (
+        f"{result.scenario.name}: {result.runner.n_restarts} restarts but "
+        f"{len(restarted)} RESTARTED events (lost or duplicated)")
+
+
+def check_fault_accounting(result: ScenarioResult, strict: bool = True) -> None:
+    """Reconcile observed restarts/errors/heartbeats with the scripted
+    faults.  ``strict`` (run-to-completion scheduling) demands equality; an
+    early-stopping scheduler may cancel a trial before its fault fires, so
+    non-strict demands the observation never *exceeds* the script."""
+    sc = result.scenario
+    expected_restarts = sc.expected_crashes - sc.expected_fatal
+    if strict:
+        assert result.runner.n_restarts == expected_restarts, (
+            f"{sc.name}: scripted {expected_restarts} absorbable crashes, "
+            f"observed {result.runner.n_restarts} restarts")
+        assert result.runner.n_errors == sc.expected_fatal, (
+            f"{sc.name}: scripted {sc.expected_fatal} fatal trials, "
+            f"observed {result.runner.n_errors} errors")
+    else:
+        assert result.runner.n_restarts <= expected_restarts, (
+            f"{sc.name}: more restarts ({result.runner.n_restarts}) than "
+            f"scripted crashes ({expected_restarts})")
+        assert result.runner.n_errors <= sc.expected_fatal, (
+            f"{sc.name}: more errors ({result.runner.n_errors}) than "
+            f"scripted fatal trials ({sc.expected_fatal})")
+    if sc.expected_stragglers:
+        straggling = {e.trial_id
+                      for e in result.recorder.of(EventType.HEARTBEAT_MISSED)}
+        scripted = {t.trial_id
+                    for t, cfg in zip(result.trials, sc.configs)
+                    if cfg.get("straggle_at")}
+        assert straggling <= scripted, (
+            f"{sc.name}: heartbeat warnings for trials that never straggled: "
+            f"{sorted(straggling - scripted)[:5]}")
+        if strict:
+            missing = scripted - straggling
+            assert not missing, (
+                f"{sc.name}: {len(missing)} scripted stragglers never "
+                f"produced HEARTBEAT_MISSED: {sorted(missing)[:5]}")
+
+
+def check_all(result: ScenarioResult, strict: bool = True,
+              gapless: bool = True) -> None:
+    check_no_slice_leaks(result)
+    check_event_log(result, gapless=gapless)
+    check_fault_accounting(result, strict=strict)
+
+
+def check_serial_equivalence(
+    scenario: Scenario,
+    scheduler_factory: Callable[[], Any],
+    lookahead: int = 1,
+) -> Dict[str, ScenarioResult]:
+    """Run the scenario twice on a capacity-1 pool — concurrent (virtual
+    worker threads, heartbeat monitor on) vs the serial reference tier — and
+    demand identical statuses, result streams and losses per trial.  With one
+    device both tiers execute trials one at a time, so any divergence is a
+    real decision-fidelity bug, not an interleaving artifact."""
+    results = {}
+    for tier in ("serial", "concurrent"):
+        results[tier] = run_scenario(
+            scenario, scheduler_factory, executor=tier, pool_devices=1,
+            lookahead=lookahead if tier == "concurrent" else 1)
+    ref, got = results["serial"], results["concurrent"]
+    assert len(ref.trials) == len(got.trials)
+    for mine, theirs in zip(got.trials, ref.trials):
+        assert mine.status == theirs.status, (
+            f"{mine.trial_id}: {mine.status} (concurrent) != "
+            f"{theirs.status} (serial); error={mine.error}")
+        mine_iters = [r.training_iteration for r in mine.results]
+        theirs_iters = [r.training_iteration for r in theirs.results]
+        assert mine_iters == theirs_iters, (
+            f"{mine.trial_id}: result streams diverge: "
+            f"{mine_iters} != {theirs_iters}")
+        for a, b in zip(mine.results, theirs.results):
+            assert abs(a.metrics["loss"] - b.metrics["loss"]) < 1e-12, (
+                f"{mine.trial_id}@{a.training_iteration}: loss diverges")
+    return results

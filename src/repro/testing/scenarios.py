@@ -1,0 +1,250 @@
+"""Scenario DSL + runner — fault sweeps on deterministic virtual time.
+
+A scenario is a list of ``SimTrainable`` configs plus expectations about the
+faults scripted into them.  ``run_scenario`` places the whole execution stack
+(executor, event bus, loggers, broker, trials) on one ``VirtualClock`` and
+runs it to completion, returning a ``ScenarioResult`` the invariant checkers
+(invariants.py) interrogate.  Three generators cover the failure classes the
+execution tiers were built for:
+
+- ``crash_storm``       — a fraction of trials crash mid-run (some more times
+                          than max_failures absorbs, ending ERROR on purpose),
+- ``straggler_cascade`` — a fraction of trials stall far past the heartbeat
+                          timeout, driving HEARTBEAT_MISSED monitoring,
+- ``resize_churn``      — elastic policy on, so early stops + completions
+                          keep resizing the survivors' slices.
+
+Everything is seeded and the virtual clock serializes thread wake order, so
+a thousand-trial sweep is reproducible enough to assert exact bookkeeping
+(crash counts, restart counts, leak-freedom) rather than just "it finished".
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.clock import VirtualClock, use_clock
+from ..core.checkpoint import CheckpointManager
+from ..core.concurrent_executor import ConcurrentMeshExecutor
+from ..core.elastic import ResourceBroker, resolve_policy
+from ..core.executor import SerialMeshExecutor
+from ..core.loggers import Logger
+from ..core.object_store import ObjectStore
+from ..core.resources import Resources
+from ..core.runner import TrialRunner
+from ..core.trial import Trial
+from ..dist.submesh import SlicePool
+from .sim import SimTrainable, reset_faults
+
+__all__ = ["Scenario", "ScenarioResult", "RecordingLogger", "run_scenario",
+           "crash_storm", "straggler_cascade", "resize_churn"]
+
+_token_counter = itertools.count()
+
+
+class RecordingLogger(Logger):
+    """Captures every event and result the runner routes to loggers (the
+    runner thread is the only caller, so plain lists suffice)."""
+
+    def __init__(self):
+        self.events: List[Any] = []
+        self.results: List[Any] = []
+
+    def on_event(self, trial, event):
+        self.events.append(event)
+
+    def on_result(self, trial, result):
+        self.results.append(result)
+
+    def of(self, kind):
+        return [e for e in self.events if e.type == kind]
+
+
+@dataclass
+class Scenario:
+    name: str
+    configs: List[Dict[str, Any]]     # one SimTrainable config per trial
+    stop_iteration: int = 5
+    max_failures: int = 1
+    elastic: Optional[str] = None     # "greedy" / "fair" / None
+    heartbeat_timeout: float = 60.0
+    # scripted-fault accounting the invariants cross-check
+    expected_crashes: int = 0         # total injected step failures (incl. kills)
+    expected_fatal: int = 0           # trials whose budget those exhaust
+    expected_stragglers: int = 0
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    trials: List[Trial]
+    runner: TrialRunner
+    executor: Any
+    pool: SlicePool
+    clock: VirtualClock
+    recorder: RecordingLogger
+    wall_elapsed_s: float = 0.0
+
+    @property
+    def virtual_elapsed_s(self) -> float:
+        return self.clock.monotonic()
+
+    def by_status(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for t in self.trials:
+            out[t.status.value] = out.get(t.status.value, 0) + 1
+        return out
+
+
+def run_scenario(
+    scenario: Scenario,
+    scheduler_factory: Callable[[], Any],
+    executor: str = "concurrent",
+    pool_devices: int = 16,
+    lookahead: int = 1,
+    max_steps: int = 10_000_000,
+) -> ScenarioResult:
+    """Run one scenario on a fresh ``VirtualClock`` to completion.
+
+    ``executor="serial"`` is the reference tier for equivalence checks; with
+    ``pool_devices=1`` both tiers execute trials one at a time, so their
+    event streams — and every scheduler decision — must coincide exactly.
+    """
+    import time as _wall
+
+    token = f"{scenario.name}-{next(_token_counter)}"
+    reset_faults()
+    clock = VirtualClock()
+    pool = SlicePool(n_virtual=pool_devices)
+    recorder = RecordingLogger()
+    t0 = _wall.monotonic()
+    with use_clock(clock):
+        store = ObjectStore()
+        ckpt = CheckpointManager(store)
+        common = dict(
+            trainable_cls_resolver=lambda name: SimTrainable,
+            checkpoint_manager=ckpt,
+            total_devices=pool_devices,
+            total_cpu=4 * pool_devices,
+            slice_pool=pool,
+            checkpoint_freq=1,
+            clock=clock,
+        )
+        if executor == "serial":
+            ex = SerialMeshExecutor(**common)
+        elif executor == "concurrent":
+            ex = ConcurrentMeshExecutor(
+                heartbeat_timeout=scenario.heartbeat_timeout, **common)
+        else:
+            raise ValueError(f"run_scenario drives in-host tiers only, "
+                             f"not {executor!r}")
+        broker = None
+        if scenario.elastic is not None or lookahead != 1:
+            broker = ResourceBroker(policy=resolve_policy(scenario.elastic),
+                                    lookahead=lookahead, clock=clock)
+        runner = TrialRunner(
+            scheduler_factory(),
+            ex,
+            logger=recorder,
+            trainable_name="SimTrainable",
+            stopping_criteria={"training_iteration": scenario.stop_iteration},
+            max_failures=scenario.max_failures,
+            broker=broker,
+        )
+        for i, config in enumerate(scenario.configs):
+            cfg = dict(config)
+            cfg.setdefault("sim_id", f"{scenario.name}-{i:05d}")
+            cfg["sim_token"] = token
+            runner.add_trial(Trial(
+                cfg, trainable_name="SimTrainable",
+                resources=Resources(cpu=1.0,
+                                    devices=int(cfg.get("devices_req", 1))),
+                stopping_criteria={"training_iteration": scenario.stop_iteration},
+                trial_id=f"{token}-{i:05d}",
+            ))
+        trials = runner.run(max_steps=max_steps)
+    reset_faults(token)
+    return ScenarioResult(
+        scenario=scenario, trials=trials, runner=runner, executor=ex,
+        pool=pool, clock=clock, recorder=recorder,
+        wall_elapsed_s=_wall.monotonic() - t0)
+
+
+# -- scenario generators ---------------------------------------------------------------
+
+def _base_config(rng: random.Random, i: int) -> Dict[str, Any]:
+    return {
+        "lr": 10 ** rng.uniform(-3, -1),
+        "step_s": rng.choice([0.5, 1.0, 2.0]),
+        "jitter_s": 0.25,
+        "sim_id": f"trial-{i:05d}",
+    }
+
+
+def crash_storm(n_trials: int = 250, seed: int = 0, stop_iteration: int = 5,
+                crash_frac: float = 0.3, fatal_frac: float = 0.05) -> Scenario:
+    """A fraction of trials crash once mid-run (absorbed by max_failures=1);
+    ``fatal_frac`` of them crash twice and must exhaust the budget."""
+    rng = random.Random(seed)
+    configs, crashes, fatal = [], 0, 0
+    for i in range(n_trials):
+        cfg = _base_config(rng, i)
+        r = rng.random()
+        if r < fatal_frac:
+            cfg["crash_at"] = rng.randint(1, stop_iteration)
+            cfg["crash_count"] = 2  # retry crashes again -> ERROR
+            crashes += 2
+            fatal += 1
+        elif r < crash_frac:
+            site = rng.random()
+            if site < 0.3:
+                cfg["kill_at"] = rng.randint(1, stop_iteration)
+            else:
+                cfg["crash_at"] = rng.randint(1, stop_iteration)
+            crashes += 1
+        configs.append(cfg)
+    return Scenario(name="crash-storm", configs=configs,
+                    stop_iteration=stop_iteration, max_failures=1,
+                    expected_crashes=crashes, expected_fatal=fatal)
+
+
+def straggler_cascade(n_trials: int = 250, seed: int = 0,
+                      stop_iteration: int = 4,
+                      straggle_frac: float = 0.2,
+                      heartbeat_timeout: float = 30.0) -> Scenario:
+    """A fraction of trials stall one step far past the heartbeat timeout;
+    the monitor must surface every one of them without perturbing any
+    scheduler decision."""
+    rng = random.Random(seed)
+    configs, stragglers = [], 0
+    for i in range(n_trials):
+        cfg = _base_config(rng, i)
+        if rng.random() < straggle_frac:
+            cfg["straggle_at"] = rng.randint(1, stop_iteration)
+            cfg["straggle_s"] = heartbeat_timeout * rng.uniform(2.5, 6.0)
+            stragglers += 1
+        configs.append(cfg)
+    return Scenario(name="straggler-cascade", configs=configs,
+                    stop_iteration=stop_iteration, max_failures=0,
+                    heartbeat_timeout=heartbeat_timeout,
+                    expected_stragglers=stragglers)
+
+
+def resize_churn(n_trials: int = 250, seed: int = 0, stop_iteration: int = 5,
+                 crash_frac: float = 0.1) -> Scenario:
+    """Elastic fair-share on: every completion/stop frees capacity the broker
+    immediately redistributes, so slices churn constantly while a sprinkle of
+    crashes exercises resize-vs-restart interleavings."""
+    rng = random.Random(seed)
+    configs, crashes = [], 0
+    for i in range(n_trials):
+        cfg = _base_config(rng, i)
+        if rng.random() < crash_frac:
+            cfg["crash_at"] = rng.randint(1, stop_iteration)
+            crashes += 1
+        configs.append(cfg)
+    return Scenario(name="resize-churn", configs=configs,
+                    stop_iteration=stop_iteration, max_failures=1,
+                    elastic="fair", expected_crashes=crashes)

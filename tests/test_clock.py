@@ -1,0 +1,227 @@
+"""Clock seam (DESIGN.md §7): WallClock veneer, VirtualClock park/advance
+semantics, cooperative primitives (event/semaphore/queue/join), deadlock
+detection, and the monotonic-deadline fix in BusDrivenExecutor."""
+import queue
+import threading
+
+import pytest
+
+from repro.core import (EventBus, EventType, TrialEvent, VirtualClock,
+                        WallClock, get_default_clock, set_default_clock,
+                        use_clock)
+from repro.core.clock import Clock
+
+
+class TestWallClock:
+    def test_axes_and_primitives(self):
+        wc = WallClock()
+        assert wc.time() > 1_000_000_000
+        m0 = wc.monotonic()
+        wc.sleep(0.01)
+        assert wc.monotonic() >= m0 + 0.005
+        ev = wc.event()
+        ev.set()
+        assert ev.wait(0.1)
+        sem = wc.semaphore(1)
+        assert sem.acquire(blocking=False)
+        assert not sem.acquire(blocking=False)
+        q = queue.Queue()
+        assert wc.queue_get(q, timeout=0.01) is None
+        q.put(7)
+        assert wc.queue_get(q, timeout=0.01) == 7
+
+    def test_default_clock_roundtrip(self):
+        base = get_default_clock()
+        vc = VirtualClock()
+        with use_clock(vc):
+            assert get_default_clock() is vc
+        assert get_default_clock() is base
+        prev = set_default_clock(vc)
+        assert prev is base
+        assert set_default_clock(None) is vc
+        assert get_default_clock() is base
+
+
+class TestVirtualClockSingleThread:
+    def test_sleep_advances_instantly(self):
+        vc = VirtualClock()
+        t0 = vc.monotonic()
+        vc.sleep(3600.0)  # an hour of virtual time, microseconds of real
+        assert vc.monotonic() == pytest.approx(t0 + 3600.0)
+        assert vc.time() == pytest.approx(vc._epoch + t0 + 3600.0)
+
+    def test_wait_for_timeout_moves_time(self):
+        vc = VirtualClock()
+        assert vc.wait_for(lambda: False, timeout=5.0) is False
+        assert vc.monotonic() == pytest.approx(5.0)
+        assert vc.wait_for(lambda: True, timeout=5.0) is True
+        assert vc.monotonic() == pytest.approx(5.0)  # no time spent
+
+    def test_queue_get_timeout_vs_item(self):
+        vc = VirtualClock()
+        q = queue.Queue()
+        assert vc.queue_get(q, timeout=2.0) is None
+        assert vc.monotonic() == pytest.approx(2.0)
+        q.put("x")
+        assert vc.queue_get(q, timeout=2.0) == "x"
+        assert vc.monotonic() == pytest.approx(2.0)  # item was already there
+
+
+class TestVirtualClockThreads:
+    def test_sleep_ordering_is_deterministic(self):
+        """Three sleepers with distinct deadlines wake in deadline order, and
+        the creator thread observes the final time after joining them."""
+        vc = VirtualClock()
+        wake_order = []
+
+        def sleeper(name, dt):
+            with vc.running():
+                vc.sleep(dt)
+                wake_order.append((name, vc.monotonic()))
+
+        threads = [threading.Thread(target=sleeper, args=(n, d), daemon=True)
+                   for n, d in [("a", 3.0), ("b", 1.0), ("c", 2.0)]]
+        for t in threads:
+            t.start()
+        for t in threads:
+            assert vc.join_thread(t, timeout=10.0)
+        assert [n for n, _ in wake_order] == ["b", "c", "a"]
+        assert [round(at, 3) for _, at in wake_order] == [1.0, 2.0, 3.0]
+
+    def test_event_wakes_virtual_waiter(self):
+        vc = VirtualClock()
+        ev = vc.event()
+        seen = []
+
+        def waiter():
+            with vc.running():
+                seen.append(ev.wait(timeout=100.0))
+
+        t = threading.Thread(target=waiter, daemon=True)
+        t.start()
+        vc.sleep(1.0)  # both parked -> virtual second passes
+        ev.set()
+        assert vc.join_thread(t, timeout=10.0)
+        assert seen == [True]
+        assert vc.monotonic() < 100.0  # woke on the set, not the timeout
+
+    def test_semaphore_park_and_release(self):
+        vc = VirtualClock()
+        sem = vc.semaphore(0)
+        got = []
+
+        def worker():
+            with vc.running():
+                got.append(sem.acquire(timeout=50.0))
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        vc.sleep(2.0)
+        sem.release()
+        assert vc.join_thread(t, timeout=10.0)
+        assert got == [True]
+
+    def test_join_timeout_returns_false(self):
+        vc = VirtualClock()
+        release = vc.event()
+
+        def worker():
+            with vc.running():
+                release.wait(timeout=1000.0)
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        assert vc.join_thread(t, timeout=5.0) is False  # virtual 5s, real ms
+        release.set()
+        assert vc.join_thread(t, timeout=10.0) is True
+
+    def test_all_parked_without_deadline_is_deadlock(self):
+        vc = VirtualClock()
+        ev = vc.event()
+
+        def worker():
+            with vc.running():
+                ev.wait()  # no timeout
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        # Creator thread parks forever too -> nobody can ever run again.
+        with pytest.raises(RuntimeError, match="deadlock"):
+            vc.wait_for(lambda: False, timeout=None)
+        ev.set()  # let the worker exit
+        vc.join_thread(t, timeout=5.0)
+
+
+class TestBusOnClock:
+    def test_publish_stamps_virtual_timestamp(self):
+        vc = VirtualClock()
+        bus = EventBus(clock=vc)
+        vc.sleep(42.0)
+        ev = bus.publish(TrialEvent(EventType.RESULT, "t0"))
+        assert ev.timestamp == pytest.approx(vc._epoch + 42.0)
+        # pre-stamped events are left alone
+        ev2 = bus.publish(TrialEvent(EventType.RESULT, "t0", timestamp=7.0))
+        assert ev2.timestamp == 7.0
+        assert ev2.seq == ev.seq + 1
+
+    def test_bus_get_parks_on_virtual_time(self):
+        vc = VirtualClock()
+        bus = EventBus(clock=vc)
+        assert bus.get(timeout=3.0) is None
+        assert vc.monotonic() == pytest.approx(3.0)
+
+        def producer():
+            with vc.running():
+                vc.sleep(5.0)
+                bus.publish(TrialEvent(EventType.RESULT, "t1"))
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        got = bus.get(timeout=60.0)  # must wake on publish at t=8, not t=63
+        assert got is not None and got.trial_id == "t1"
+        assert vc.monotonic() == pytest.approx(8.0)
+        vc.join_thread(t, timeout=5.0)
+
+
+class TestMonotonicDeadlines:
+    def test_get_next_event_survives_wall_jump(self):
+        """BusDrivenExecutor deadline math reads clock.monotonic(), so a wall
+        timestamp jump (NTP step / suspended laptop) can neither instantly
+        expire nor strand a bounded wait."""
+        from repro.core import CheckpointManager, ObjectStore
+        from repro.core.executor import BusDrivenExecutor
+
+        class JumpyClock(Clock):
+            """time() leaps hours ahead; monotonic() ticks honestly."""
+
+            def __init__(self):
+                self._mono = 0.0
+
+            def time(self):
+                return 1e9 + self._mono + 7200.0  # wall is 2h in the future
+
+            def monotonic(self):
+                self._mono += 0.05
+                return self._mono
+
+            def queue_get(self, q, timeout):
+                # bounded waits land here; consume monotonic time only
+                self._mono += min(timeout, 0.2)
+                try:
+                    return q.get_nowait()
+                except Exception:
+                    return None
+
+            def kick(self, channel=None):
+                pass
+
+        clock = JumpyClock()
+        ex = BusDrivenExecutor(lambda name: None,
+                               CheckpointManager(ObjectStore()), clock=clock)
+        ex._workers["t0"] = object()  # a live worker forces the wait loop
+        start = clock._mono
+        assert ex.get_next_event(timeout=1.0) is None
+        elapsed = clock._mono - start
+        # With time.time() arithmetic the 2h wall jump would have expired the
+        # wait instantly (elapsed ~0) — monotonic math consumes the full budget.
+        assert 0.9 <= elapsed <= 3.0

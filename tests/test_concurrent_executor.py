@@ -1,7 +1,15 @@
 """ConcurrentMeshExecutor + fault tolerance: worker-thread stepping under the
 full scheduler matrix, restart-from-checkpoint bounded by max_failures, the
 experiment-level error cap, straggler heartbeats, PBT restart error surfacing,
-and crash-durable metric logs."""
+and crash-durable metric logs.
+
+The sleep-bound tests (heartbeat straggler, abandoned worker, the scheduler
+matrix's per-step "device work") run on a ``VirtualClock`` (DESIGN.md §7):
+their timelines are the same as the old wall-clock versions — 0.6s steps
+against a 0.15s heartbeat, a 1.5s stuck step against a 0.1s join — but they
+execute in milliseconds and their event schedules are deterministic, so the
+assertions are *tighter* than the wall versions could afford (exact heartbeat
+counts, not "at least one")."""
 import csv
 import glob
 import json
@@ -16,7 +24,9 @@ from repro.core import (ASHAScheduler, CheckpointManager, ConcurrentMeshExecutor
                         EventType, FIFOScheduler, HyperBandScheduler,
                         MedianStoppingRule, ObjectStore, PopulationBasedTraining,
                         Resources, SerialMeshExecutor, Trainable, Trial,
-                        TrialRunner, TrialStatus, loguniform, run_experiments)
+                        TrialRunner, TrialStatus, VirtualClock,
+                        get_default_clock, loguniform, run_experiments,
+                        use_clock)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -30,7 +40,8 @@ class LrCounter(Trainable):
 
     def step(self):
         self.n += 1
-        time.sleep(0.001)  # a sliver of "device work" to overlap
+        # a sliver of "device work" to overlap (virtual under a VirtualClock)
+        get_default_clock().sleep(0.001)
         return {"loss": (self.lr - 0.01) ** 2 + 1.0 / self.n}
 
     def save(self):
@@ -95,23 +106,28 @@ SCHEDULERS = {
 class TestSchedulerMatrix:
     @pytest.mark.parametrize("name", list(SCHEDULERS))
     def test_scheduler_on_concurrent_executor(self, name):
-        an = run_experiments(
-            LrCounter,
-            {"lr": loguniform(1e-3, 1e-1)},
-            scheduler=SCHEDULERS[name](),
-            num_samples=4,
-            stop={"training_iteration": 6},
-            total_devices=4,
-            checkpoint_freq=1,
-            executor="concurrent",
-            seed=0,
-        )
+        with use_clock(VirtualClock()) as vc:
+            an = run_experiments(
+                LrCounter,
+                {"lr": loguniform(1e-3, 1e-1)},
+                scheduler=SCHEDULERS[name](),
+                num_samples=4,
+                stop={"training_iteration": 6},
+                total_devices=4,
+                checkpoint_freq=1,
+                executor="concurrent",
+                seed=0,
+                clock=vc,
+            )
         assert an.best_value() is not None
         finished = [t for t in an.trials if t.status == TrialStatus.TERMINATED]
         assert finished, f"{name}: no trial finished"
+        assert vc.monotonic() > 0, "no virtual time elapsed — steps never slept"
         for t in an.trials:  # per-trial results arrive strictly in order
             iters = [r.training_iteration for r in t.results]
             assert iters == sorted(iters), (name, t.trial_id, iters)
+            for r in t.results:  # stamped on the virtual axis, in order
+                assert r.timestamp >= 1_000_000_000
 
 
 class TestConcurrentBasics:
@@ -275,7 +291,7 @@ class TestHeartbeat:
             self.n = 0
 
         def step(self):
-            time.sleep(0.6)
+            get_default_clock().sleep(0.63)
             self.n += 1
             return {"loss": 1.0}
 
@@ -286,19 +302,47 @@ class TestHeartbeat:
             self.n = state["n"]
 
     def test_straggler_emits_heartbeat_missed(self):
-        ex = make_concurrent(self.Slow, checkpoint_freq=0,
-                             heartbeat_timeout=0.15)
-        trial = Trial({}, stopping_criteria={"training_iteration": 1})
-        assert ex.start_trial(trial)
-        seen = set()
-        deadline = time.time() + 10
-        while time.time() < deadline and EventType.RESULT not in seen:
-            ev = ex.get_next_event(timeout=1.0)
-            if ev is not None:
-                seen.add(ev.type)
-        ex.shutdown()
-        assert EventType.HEARTBEAT_MISSED in seen
-        assert EventType.RESULT in seen
+        """The wall-clock version of this test could only assert "some
+        heartbeat arrived within 10 real seconds".  On virtual time the whole
+        schedule is deterministic: a 0.63s step against a 0.15s timeout with
+        a 0.05s monitor tick warns at t=0.15/0.35/0.55, all before the
+        RESULT — exactly three warnings, strictly ordered."""
+        vc = VirtualClock()
+        with use_clock(vc):
+            ex = make_concurrent(self.Slow, checkpoint_freq=0,
+                                 heartbeat_timeout=0.15, clock=vc)
+            trial = Trial({}, stopping_criteria={"training_iteration": 1})
+            assert ex.start_trial(trial)
+            events = []
+            while EventType.RESULT not in [e.type for e in events]:
+                ev = ex.get_next_event(timeout=5.0)
+                assert ev is not None, "virtual run must always make progress"
+                events.append(ev)
+            ex.shutdown()
+        kinds = [e.type for e in events]
+        assert kinds == [EventType.HEARTBEAT_MISSED] * 3 + [EventType.RESULT]
+        stalled = [e.info["stalled_s"] for e in events[:-1]]
+        assert stalled == [pytest.approx(0.15), pytest.approx(0.35),
+                           pytest.approx(0.55)]
+        assert vc.monotonic() == pytest.approx(0.63)  # step length, no slack
+
+
+class TestSaveMidStepVirtual:
+    def test_save_checkpoint_waits_out_inflight_step(self):
+        """save_checkpoint against a worker mid-step must let virtual time
+        run the step down (a bare lock wait would freeze the virtual epoch
+        and deadlock) — the checkpoint lands right after the step completes."""
+        vc = VirtualClock()
+        with use_clock(vc):
+            ex = make_concurrent(TestHeartbeat.Slow, checkpoint_freq=0,
+                                 heartbeat_timeout=0, clock=vc)
+            trial = Trial({}, stopping_criteria={"training_iteration": 3})
+            assert ex.start_trial(trial)
+            vc.sleep(0.1)  # worker is inside its 0.63s step, holding ws.lock
+            ckpt = ex.save_checkpoint(trial)  # paced through the clock
+            assert ckpt.training_iteration == 1
+            assert 0.63 <= vc.monotonic() < 0.7  # waited the step out, no more
+            ex.shutdown()
 
 
 class TestAbandonedWorker:
@@ -311,7 +355,7 @@ class TestAbandonedWorker:
             self.n = 0
 
         def step(self):
-            time.sleep(1.5)
+            get_default_clock().sleep(1.5)
             self.n += 1
             return {"loss": 1.0}
 
@@ -322,20 +366,28 @@ class TestAbandonedWorker:
             self.n = state["n"]
 
     def test_join_timeout_leaks_slice_and_discards_result(self):
-        ex = make_concurrent(self.Stuck, devices=2, checkpoint_freq=1,
-                             heartbeat_timeout=0, join_timeout=0.1)
-        trial = Trial({}, resources=Resources(devices=2),
-                      stopping_criteria={"training_iteration": 3})
-        assert ex.start_trial(trial)
-        time.sleep(0.3)  # worker is inside the 1.5s step
-        ex.pause_trial(trial)  # join times out -> worker abandoned
-        assert trial.status == TrialStatus.PAUSED
-        assert trial.checkpoint is None       # no torn checkpoint was written
-        assert not ex.has_running()
-        assert not ex.has_resources(trial)    # slice leaked on purpose
-        time.sleep(1.6)                       # stale step completes after halt
-        assert ex.bus.empty()                 # its result was discarded
-        ex.shutdown()
+        """Same timeline as the wall version (pause 0.3s into a 1.5s step,
+        0.1s join budget), but the sleeps are virtual: the join deadline
+        expires at t=0.4 while the worker sleeps until t=1.5, so abandonment
+        is guaranteed rather than real-scheduler-dependent."""
+        vc = VirtualClock()
+        with use_clock(vc):
+            ex = make_concurrent(self.Stuck, devices=2, checkpoint_freq=1,
+                                 heartbeat_timeout=0, join_timeout=0.1,
+                                 clock=vc)
+            trial = Trial({}, resources=Resources(devices=2),
+                          stopping_criteria={"training_iteration": 3})
+            assert ex.start_trial(trial)
+            vc.sleep(0.3)          # worker is inside the 1.5s step
+            ex.pause_trial(trial)  # both join attempts (halt + reap) time out
+            assert vc.monotonic() == pytest.approx(0.5)  # 0.3 + 2 x 0.1
+            assert trial.status == TrialStatus.PAUSED
+            assert trial.checkpoint is None    # no torn checkpoint was written
+            assert not ex.has_running()
+            assert not ex.has_resources(trial)  # slice leaked on purpose
+            vc.sleep(1.6)          # stale step completes (t=1.5) after halt
+            assert ex.bus.empty()  # its result was discarded
+            ex.shutdown()
 
 
 _CRASH_SCRIPT = """

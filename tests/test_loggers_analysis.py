@@ -62,6 +62,52 @@ class TestLoggers:
         assert capsys.readouterr().out == ""
 
 
+class TestLoggersOnVirtualClock:
+    """Clock-seam coverage (DESIGN.md §7): the JSONL fallback-timestamp path
+    for bus-less events, and Console flush throttling, both driven
+    deterministically on a VirtualClock instead of real 5-second gaps."""
+
+    def test_jsonl_event_timestamps_virtual_and_fallback(self, tmp_path):
+        from repro.core import EventType, TrialEvent, VirtualClock
+
+        vc = VirtualClock()
+        path = str(tmp_path / "events.jsonl")
+        lg = JSONLLogger(path, clock=vc)
+        t = Trial({})
+        vc.sleep(100.0)
+        # Stamped event (came off a bus): its timestamp must be preserved.
+        lg.on_event(t, TrialEvent(EventType.HEARTBEAT_MISSED, t.trial_id,
+                                  timestamp=vc.time()))
+        vc.sleep(50.0)
+        # Unstamped event (runner/broker handed it straight to the logger):
+        # the logger's own clock supplies the time — the fallback path.
+        lg.on_event(t, TrialEvent(EventType.RESTARTED, t.trial_id))
+        lg.close()
+        stamped, fallback = [json.loads(l) for l in open(path)]
+        assert stamped["event"] == "heartbeat_missed"
+        assert stamped["t"] == pytest.approx(vc._epoch + 100.0)
+        assert fallback["event"] == "restarted"
+        assert fallback["t"] == pytest.approx(vc._epoch + 150.0)
+
+    def test_console_flush_throttle_on_virtual_time(self, capsys):
+        from repro.core import VirtualClock
+
+        vc = VirtualClock()
+        lg = ConsoleLogger(interval_s=5.0, clock=vc)
+        t = Trial({})
+        vc.sleep(10.0)  # move past _last=0 so the first result prints
+        lg.on_result(t, Result(t.trial_id, 1, {"loss": 1.0}))
+        for i in range(2, 6):  # 4 results inside the 5s window: throttled
+            vc.sleep(1.0)
+            lg.on_result(t, Result(t.trial_id, i, {"loss": 1.0 / i}))
+        vc.sleep(1.1)  # crosses the 5s boundary: prints again
+        lg.on_result(t, Result(t.trial_id, 6, {"loss": 1.0 / 6}))
+        out = [l for l in capsys.readouterr().out.splitlines() if l]
+        assert len(out) == 2
+        assert "iter=1" in out[0] and "iter=6" in out[1]
+        assert lg._n_results == 6  # every result counted, two printed
+
+
 class TestAnalysis:
     def test_best_trial_min_mode(self):
         a = make_trial_with_results([3, 2, 1])

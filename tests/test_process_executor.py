@@ -218,6 +218,57 @@ class TestKillOnStraggle:
         assert pending.status == TrialStatus.TERMINATED
         assert pool.n_free == 2  # everything returned to the pool
 
+    def test_virtual_deadline_math_kills_straggler(self):
+        """Clock-seam port (DESIGN.md §7): the straggler deadline is FIVE
+        MINUTES of *virtual* time, fast-forwarded in milliseconds of real
+        time while the child sleeps on real wall-clock — children keep real
+        time, the monitor's deadline arithmetic reads the injected clock.
+        The wall version of this escalation (below) can only afford a 0.8s
+        deadline; this one proves production-scale timeouts are testable."""
+        from repro.core import VirtualClock
+
+        vc = VirtualClock()
+        pool = SlicePool(n_virtual=2)
+        ex = ProcessMeshExecutor(
+            factory_resolver=lambda name: factory("Sleeper"),
+            checkpoint_manager=CheckpointManager(ObjectStore()),
+            total_devices=2, slice_pool=pool, checkpoint_freq=0,
+            heartbeat_timeout=0.0, straggler_deadline=300.0,
+            spawn_timeout=0,  # spawn ages would fast-forward too: disable
+            clock=vc)
+        stuck = Trial({"sleep_s": 120.0}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 3})
+        other = Trial({"sleep_s": 0.01}, resources=Resources(devices=2),
+                      stopping_criteria={"training_iteration": 1})
+        try:
+            assert ex.start_trial(stuck)
+            seen = set()
+            deadline = time.time() + 120
+            while time.time() < deadline and EventType.ERROR not in seen:
+                ev = ex.get_next_event(timeout=30.0)  # 30 virtual s per call
+                if ev is not None:
+                    seen.add(ev.type)
+            assert EventType.KILLED in seen and EventType.ERROR in seen
+            assert ex.n_killed == 1
+            assert vc.monotonic() >= 300.0  # the deadline actually elapsed
+            ex.requeue_trial(stuck)
+            assert ex.has_resources(other)  # slice reclaimed
+            # The healthy child ahead runs on real time while virtual time
+            # races — disable the (already-proven) kill escalation so its
+            # virtual step age cannot SIGKILL a live, progressing worker.
+            ex.straggler_deadline = 0.0
+            assert ex.start_trial(other)
+            ev = None
+            deadline = time.time() + 120
+            while time.time() < deadline:
+                ev = ex.get_next_event(timeout=30.0)
+                if ev is not None and ev.type == EventType.RESULT:
+                    break
+            assert ev is not None and ev.type == EventType.RESULT
+            assert ev.trial_id == other.trial_id
+        finally:
+            ex.shutdown()
+
     def test_executor_level_slice_release_on_requeue(self, tmp_path):
         """After KILLED+ERROR, requeue_trial releases the slice immediately —
         has_resources flips before any relaunch."""
