@@ -1,0 +1,192 @@
+"""Fault-recovery benchmark: control-plane overhead under a crash storm
+(DESIGN.md §8).
+
+Drives the deterministic scenario harness (``repro.testing``) with a
+``crash_storm`` at 10^4 virtual trials on the concurrent executor: ~30% of
+trials crash mid-run and restart from their last checkpoint, a sprinkle
+exhaust their failure budget and end ERROR.  Every step is virtual-time
+``sleep`` — zero wall-clock work — so the measured wall time *is* the control
+plane: EventBus fan-in, SlicePool first-fit, ``choose_trial_to_run``,
+checkpoint bookkeeping, restart orchestration.  Reported:
+
+- **trials_recovered_per_s** — crashed-then-TERMINATED trials per wall second
+  (the paper-level fault-tolerance claim: recovery is cheap);
+- **us_per_event** — wall microseconds of control-plane work per bus event
+  (the regression gate).
+
+    python benchmarks/bench_faults.py             # full 10^4-trial run + gate
+    python benchmarks/bench_faults.py --smoke     # CI smoke (2000 trials)
+
+Writes benchmarks/results/bench_faults.csv and gates ``us_per_event`` against
+the committed baseline (benchmarks/results/bench_faults_baseline.csv) with a
+3x hardware margin — wide enough to absorb CI-runner variance, tight enough
+to catch an accidentally quadratic hot path or a per-event allocation storm.
+If no baseline row exists for the shape, the run bootstraps one (commit it).
+
+A second, ungated section re-runs a smaller storm with full observability on
+(tracing + metrics) and exports the Chrome trace + metrics JSONL to
+benchmarks/out/ — the CI artifacts — while recording the enabled-overhead
+ratio next to the disabled run.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_root = os.path.join(_here, os.pardir)
+_src = os.path.join(_root, "src")
+for p in (_src,):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import FIFOScheduler, TrialStatus
+from repro.obs import Observability
+from repro.testing import crash_storm, run_scenario
+
+try:
+    from .common import write_csv, RESULTS_DIR
+except ImportError:
+    sys.path.insert(0, _here)
+    from common import write_csv, RESULTS_DIR
+
+OUT_DIR = os.path.join(_here, "out")
+BASELINE = os.path.join(RESULTS_DIR, "bench_faults_baseline.csv")
+GATE_MARGIN = 3.0  # x over baseline us_per_event: hardware noise, not drift
+
+
+def run_storm(n_trials: int, pool_devices: int = 64, seed: int = 0,
+              obs: Optional[Observability] = None,
+              label: str = "disabled") -> Dict[str, Any]:
+    scenario = crash_storm(n_trials=n_trials, seed=seed)
+    res = run_scenario(scenario, lambda: FIFOScheduler(metric="loss", mode="min"),
+                       executor="concurrent", pool_devices=pool_devices,
+                       obs=obs, token=f"bench-faults-{label}-{n_trials}")
+    if obs is not None:
+        obs.close(res.executor)
+    trials = res.trials
+    recovered = sum(1 for t in trials
+                    if t.num_failures > 0 and t.status == TrialStatus.TERMINATED)
+    errored = sum(1 for t in trials if t.status == TrialStatus.ERROR)
+    assert errored == scenario.expected_fatal, (errored, scenario.expected_fatal)
+    n_events = len(res.recorder.events) + len(res.recorder.results)
+    wall = res.wall_elapsed_s
+    return {
+        "bench": "fault_storm", "obs": label,
+        "n_trials": n_trials, "pool_devices": pool_devices,
+        "recovered": recovered, "errored": errored,
+        "n_events": n_events,
+        "wall_s": round(wall, 3),
+        "virtual_s": round(res.virtual_elapsed_s, 1),
+        "trials_recovered_per_s": round(recovered / max(wall, 1e-9), 1),
+        "us_per_event": round(wall / max(n_events, 1) * 1e6, 2),
+    }
+
+
+def read_baseline(n_trials: int) -> Optional[float]:
+    """Committed baseline us_per_event for this storm shape, or None."""
+    if not os.path.exists(BASELINE):
+        return None
+    with open(BASELINE) as f:
+        for row in csv.DictReader(f):
+            if (row.get("bench") == "fault_storm"
+                    and int(row.get("n_trials", -1)) == n_trials
+                    and row.get("obs") == "disabled"):
+                return float(row["us_per_event"])
+    return None
+
+
+def bootstrap_baseline(row: Dict[str, Any]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    exists = os.path.exists(BASELINE)
+    with open(BASELINE, "a", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(row))
+        if not exists:
+            w.writeheader()
+        w.writerow(row)
+
+
+def run(n_trials: int = 10_000, artifact_trials: int = 500,
+        pool_devices: int = 64) -> List[Dict[str, Any]]:
+    """Harness entry (benchmarks.run): returns the result rows (no gate)."""
+    rows: List[Dict[str, Any]] = []
+
+    row = run_storm(n_trials, pool_devices)
+    print(f"[bench_faults] storm n={n_trials}: {row['recovered']} recovered, "
+          f"{row['errored']} fatal in {row['wall_s']:.1f}s wall "
+          f"({row['virtual_s']:.0f} virtual-s) -> "
+          f"{row['trials_recovered_per_s']:.0f} recovered/s, "
+          f"{row['us_per_event']:.1f} us/event over {row['n_events']} events")
+    rows.append(row)
+
+    # Observability-on artifact run: Chrome trace + metrics JSONL for CI.
+    os.makedirs(OUT_DIR, exist_ok=True)
+    trace_path = os.path.join(OUT_DIR, "bench_faults_trace.json")
+    metrics_path = os.path.join(OUT_DIR, "bench_faults_metrics.jsonl")
+    obs = Observability(trace=trace_path, metrics=metrics_path,
+                        metrics_interval=60.0)
+    traced = run_storm(artifact_trials, pool_devices, obs=obs, label="traced")
+    base = run_storm(artifact_trials, pool_devices, label="disabled-small")
+    traced["enabled_overhead_x"] = round(
+        traced["us_per_event"] / max(base["us_per_event"], 1e-9), 2)
+    print(f"[bench_faults] traced n={artifact_trials}: "
+          f"{traced['us_per_event']:.1f} us/event vs "
+          f"{base['us_per_event']:.1f} disabled "
+          f"({traced['enabled_overhead_x']:.2f}x, recorded not gated); "
+          f"trace -> {trace_path}")
+    rows.extend([traced, base])
+
+    fields: List[str] = []
+    for r in rows:
+        fields.extend(k for k in r if k not in fields)
+    padded = [{k: r.get(k, "") for k in fields} for r in rows]
+    path = write_csv("bench_faults", padded)
+    print(f"[bench_faults] results -> {path}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=10_000)
+    ap.add_argument("--pool-devices", type=int, default=64)
+    ap.add_argument("--margin", type=float, default=GATE_MARGIN,
+                    help="allowed us_per_event growth over the committed "
+                         "baseline before the gate fails")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 2000-trial storm, same gate")
+    args = ap.parse_args()
+    if args.smoke:
+        args.trials = min(args.trials, 2000)
+
+    rows = run(args.trials, pool_devices=args.pool_devices)
+    storm = rows[0]
+
+    if storm["recovered"] == 0:
+        print("[bench_faults] FAIL: the storm recovered zero trials — "
+              "restart-from-checkpoint is not engaging", file=sys.stderr)
+        return 1
+    baseline = read_baseline(args.trials)
+    if baseline is None:
+        bootstrap_baseline(storm)
+        print(f"[bench_faults] no committed baseline for n={args.trials}; "
+              f"bootstrapped {storm['us_per_event']:.1f} us/event -> "
+              f"{BASELINE} (commit it)")
+        return 0
+    limit = baseline * args.margin
+    if storm["us_per_event"] > limit:
+        print(f"[bench_faults] FAIL: {storm['us_per_event']:.1f} us/event > "
+              f"{limit:.1f} (baseline {baseline:.1f} x {args.margin:.1f} "
+              f"margin) — control-plane overhead regressed", file=sys.stderr)
+        return 1
+    print(f"[bench_faults] PASS: {storm['us_per_event']:.1f} us/event <= "
+          f"{limit:.1f} (baseline {baseline:.1f}, "
+          f"{storm['trials_recovered_per_s']:.0f} trials recovered/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

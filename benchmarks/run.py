@@ -11,6 +11,7 @@ benchmarks/results/*.csv.
   scaling      — slice-pool occupancy under irregular trials (paper §4.3.1)
   process      — GIL-contention sweep: process vs thread vs serial executors
   elastic      — elastic slice reclaim vs static placement + lookahead credits
+  faults       — crash-storm recovery rate + control-plane overhead per event
   vmap         — beyond-paper: stacked-vmap trial execution vs serial
   kernels      — pure-jnp oracle timings (TPU kernel baselines)
   roofline     — per-(arch x shape x mesh) table from the dry-run artifacts
@@ -26,12 +27,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="run a single bench (loc|convergence|overhead|"
-                         "scaling|async|process|elastic|vmap|kernels|roofline)")
+                         "scaling|async|process|elastic|faults|vmap|kernels|"
+                         "roofline)")
     args = ap.parse_args()
 
     from . import (bench_async, bench_convergence, bench_elastic,
-                   bench_kernels, bench_loc, bench_overhead, bench_process,
-                   bench_roofline, bench_scaling, bench_vmap)
+                   bench_faults, bench_kernels, bench_loc, bench_overhead,
+                   bench_process, bench_roofline, bench_scaling, bench_vmap)
     benches = {
         "loc": bench_loc.run,
         "convergence": bench_convergence.run,
@@ -40,6 +42,7 @@ def main() -> None:
         "async": bench_async.run,
         "process": bench_process.run,
         "elastic": bench_elastic.run,
+        "faults": lambda: bench_faults.run(2000),
         "vmap": bench_vmap.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,

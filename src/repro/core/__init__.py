@@ -34,6 +34,8 @@ from .search.space import (
 from .search.basic import GridSearcher, RandomSearcher, Searcher
 from .search.tpe import TPESearcher
 from .search.gp import GPSearcher
+from ..obs import (NULL_OBS, MetricsRegistry, Observability,  # DESIGN.md §8
+                   Tracer)
 
 __all__ = [
     "Trainable", "FunctionTrainable", "FunctionHandle", "wrap_function",
@@ -57,4 +59,5 @@ __all__ = [
     "Resources", "ResourceAccountant", "ObjectStore", "CheckpointManager",
     "save_pytree", "load_pytree", "tree_to_bytes", "tree_from_bytes",
     "Logger", "ConsoleLogger", "CSVLogger", "JSONLLogger", "CompositeLogger",
+    "Observability", "NULL_OBS", "MetricsRegistry", "Tracer",
 ]

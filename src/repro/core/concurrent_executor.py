@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import threading
 import traceback
+from time import perf_counter as _perf
 from typing import Any, Callable, Dict, Optional
 
 from .api import Trainable
@@ -96,10 +97,11 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         event_bus: Optional[EventBus] = None,
         join_timeout: float = 10.0,
         clock: Optional[Clock] = None,
+        obs: Optional[Any] = None,
     ):
         super().__init__(trainable_cls_resolver, checkpoint_manager,
                          total_cpu, total_devices, slice_pool, checkpoint_freq,
-                         event_bus=event_bus, clock=clock)
+                         event_bus=event_bus, clock=clock, obs=obs)
         self.heartbeat_timeout = heartbeat_timeout
         self.join_timeout = join_timeout
         self._event_wait_bound = max(60.0, join_timeout)
@@ -130,6 +132,12 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
 
     def _run_worker(self, ws: _WorkerState) -> None:
         trial_id = ws.trial.trial_id
+        # Worker-side spans (step, ckpt.save) are batched per result and
+        # shipped on the bus as ONE SPAN event just before the RESULT, so the
+        # runner adopts them onto the trial's trace row (DESIGN.md §8).
+        # Timestamps come from the shared clock — deterministic under virtual
+        # time.  With tracing off this adds one attribute test per step.
+        traced = self.obs.tracer.enabled
         while True:
             # Acquire one step credit; the runner grants them on CONTINUE
             # (and _halt releases one after setting stop, so a halted worker
@@ -137,6 +145,9 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
             ws.credits.acquire()
             if ws.stop.is_set():
                 return
+            spans = []
+            if traced:
+                t_step = self.clock.time()
             with ws.lock:
                 ws.step_started = self.clock.monotonic()
                 ws.in_step = True
@@ -155,6 +166,10 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                 # trial — so publishing this result or checkpointing now would
                 # corrupt the live instance's state.  Discard and exit.
                 return
+            if traced:
+                spans.append(("step", t_step, self.clock.time() - t_step,
+                              "train", "host",
+                              {"iteration": ws.trainable.iteration}))
             done = bool(metrics.pop("done", False))
             result = Result(
                 trial_id=trial_id,
@@ -169,8 +184,14 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                 and not done
             ):
                 try:
+                    if traced:
+                        t_ck = self.clock.time()
                     with ws.lock:
                         ckpt = self._save_locked(ws)
+                    if traced:
+                        spans.append(("ckpt.save", t_ck,
+                                      self.clock.time() - t_ck, "ckpt", "host",
+                                      {"iteration": ws.trainable.iteration}))
                     self.bus.publish(TrialEvent(
                         EventType.CHECKPOINTED, trial_id, checkpoint=ckpt))
                 except NotImplementedError:
@@ -180,6 +201,9 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                     self.bus.publish(TrialEvent(
                         EventType.ERROR, trial_id, error=traceback.format_exc()))
                     return
+            if spans:
+                self.bus.publish(TrialEvent(
+                    EventType.SPAN, trial_id, info={"spans": spans}))
             ws.published += 1  # before publish: see _WorkerState.parked
             self.bus.publish(TrialEvent(EventType.RESULT, trial_id, result=result))
             if done:
@@ -229,14 +253,13 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         """Acquire resources + slice and build the trainable (restoring
         ``state`` first, so a worker can never step before the restore lands);
         on any failure roll back the acquisition and mark the trial ERROR."""
-        self.accountant.acquire(trial.resources)
-        if self.slice_pool is not None:
-            self._slices[trial.trial_id] = self.slice_pool.acquire(trial.resources.devices)
+        self._acquire_slice(trial)
         try:
-            trainable = self._instantiate(trial)
-            if state is not None:
-                trainable.restore(state)
-                trainable.iteration = iteration
+            with self.obs.tracer.span("build", trial.trial_id, cat="lifecycle"):
+                trainable = self._instantiate(trial)
+                if state is not None:
+                    trainable.restore(state)
+                    trainable.iteration = iteration
             return trainable
         except Exception:
             self._release(trial)
@@ -250,8 +273,14 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         state, iteration = None, 0
         if checkpoint is not None:
             try:
-                with self._ckpt_lock:
-                    state = self.ckpt.restore(checkpoint)
+                with self.obs.tracer.span("ckpt.restore", trial.trial_id,
+                                          cat="ckpt",
+                                          iteration=checkpoint.training_iteration):
+                    p0 = _perf()
+                    with self._ckpt_lock:
+                        state = self.ckpt.restore(checkpoint)
+                if self._m_ckpt_restore is not None:
+                    self._m_ckpt_restore.observe((_perf() - p0) * 1e6)
             except Exception:
                 trial.error = traceback.format_exc()
                 trial.set_status(TrialStatus.ERROR)
@@ -300,9 +329,12 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
     # -- checkpoints ------------------------------------------------------------------
     def _save_locked(self, ws: _WorkerState) -> Checkpoint:
         """Caller holds ws.lock (or the thread is joined)."""
+        p0 = _perf()
         state = ws.trainable.save()
         with self._ckpt_lock:
             ckpt = self.ckpt.save(ws.trial.trial_id, ws.trainable.iteration, state)
+        if self._m_ckpt_save is not None:
+            self._m_ckpt_save.observe((_perf() - p0) * 1e6)
         ws.trial.checkpoint = ckpt
         return ckpt
 

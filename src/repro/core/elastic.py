@@ -223,19 +223,33 @@ class ResourceBroker:
         target = self.policy.propose(runner, trial, pool, sl)
         if target is None or target == sl.size:
             return
-        ok = ex.resize_trial(trial, target)
-        info = {"from_devices": sl.size, "to_devices": target,
+        from_devices = sl.size
+        tracer = runner.obs.tracer
+        if tracer.enabled:
+            with tracer.span("resize", trial.trial_id, cat="elastic",
+                             from_devices=from_devices, to_devices=target,
+                             policy=self.policy.name) as sp:
+                ok = ex.resize_trial(trial, target)
+                sp.arg("ok", ok)
+        else:
+            ok = ex.resize_trial(trial, target)
+        m = runner.obs.metrics
+        info = {"from_devices": from_devices, "to_devices": target,
                 "policy": self.policy.name,
                 "utilization": round(pool.utilization(), 3),
                 "holes": pool.fragments(),
                 "largest_free_block": pool.largest_free_block()}
         if ok:
             self.n_resized += 1
+            if m is not None:
+                m.counter("trials.resized").inc()
             runner.logger.on_event(trial, TrialEvent(
                 EventType.RESIZED, trial.trial_id, info=info,
                 timestamp=self.clock.time()))
         else:
             self.n_resize_failed += 1
+            if m is not None:
+                m.counter("trials.resize_failed").inc()
             runner.logger.on_event(trial, TrialEvent(
                 EventType.RESIZE_FAILED, trial.trial_id, info=info,
                 timestamp=self.clock.time()))

@@ -25,6 +25,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from time import perf_counter as _perf
+
 from .clock import Clock, get_default_clock
 from .trial import Checkpoint, Result
 
@@ -41,6 +43,7 @@ class EventType(str, enum.Enum):
     RESIZED = "RESIZED"                    # elastic slice resize applied (DESIGN.md §6)
     RESIZE_FAILED = "RESIZE_FAILED"        # resize rejected/rolled back; trial keeps its old slice
     CREDITS = "CREDITS"                    # lookahead credit grant changed for a trial
+    SPAN = "SPAN"                          # batch of trace spans from a worker (repro.obs)
 
 
 @dataclass
@@ -56,6 +59,10 @@ class TrialEvent:
     # clock so an unstamped event still gets a usable time.
     timestamp: Optional[float] = None
     seq: int = -1                          # assigned by the bus on publish
+    # Real (perf_counter) publish stamp, set only when the bus carries a
+    # metrics registry: fan-in latency = how long an event sat queued before
+    # the runner drained it.  Profiling only — never on the virtual axis.
+    _mono_pub: Optional[float] = None
 
 
 class EventBus:
@@ -72,12 +79,21 @@ class EventBus:
     ``kick``s the clock so parked virtual waiters re-check the queue.
     """
 
-    def __init__(self, maxsize: int = 0, clock: Optional[Clock] = None):
+    def __init__(self, maxsize: int = 0, clock: Optional[Clock] = None,
+                 metrics: Optional[Any] = None):
         self._q: "queue.Queue[TrialEvent]" = queue.Queue(maxsize=maxsize)
         self._lock = threading.Lock()
         self._seq = itertools.count()
         self.clock = clock or get_default_clock()
         self.n_published = 0
+        # Hot-path discipline (repro.obs): resolve instruments once; with no
+        # registry every publish/get pays a single None test.
+        if metrics is not None:
+            self._m_pub = metrics.counter("bus.published")
+            self._m_depth = metrics.gauge("bus.depth")
+            self._m_fanin = metrics.histogram("bus.fanin_us")
+        else:
+            self._m_pub = self._m_depth = self._m_fanin = None
 
     def publish(self, event: TrialEvent) -> TrialEvent:
         with self._lock:
@@ -86,17 +102,25 @@ class EventBus:
                 event.timestamp = self.clock.time()
             self._q.put(event)
             self.n_published += 1
+        if self._m_pub is not None:
+            self._m_pub.inc()
+            self._m_depth.set(self._q.qsize())
+            event._mono_pub = _perf()
         self.clock.kick(self._q)  # wake a virtual consumer parked on this queue
         return event
 
     def get(self, timeout: Optional[float] = None) -> Optional[TrialEvent]:
         """Next event, or None after ``timeout`` seconds (None = non-blocking)."""
         if timeout is not None:
-            return self.clock.queue_get(self._q, timeout)
-        try:
-            return self._q.get_nowait()
-        except queue.Empty:
-            return None
+            ev = self.clock.queue_get(self._q, timeout)
+        else:
+            try:
+                ev = self._q.get_nowait()
+            except queue.Empty:
+                return None
+        if ev is not None and self._m_fanin is not None and ev._mono_pub is not None:
+            self._m_fanin.observe((_perf() - ev._mono_pub) * 1e6)
+        return ev
 
     def drain(self) -> List[TrialEvent]:
         """All currently queued events, in order, without blocking."""

@@ -13,8 +13,10 @@ from __future__ import annotations
 
 import traceback
 from collections import deque
+from time import perf_counter as _perf
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from ..obs import NULL_OBS
 from .api import Trainable
 from .checkpoint import CheckpointManager
 from .clock import Clock, get_default_clock
@@ -123,6 +125,7 @@ class _SlicedExecutor(TrialExecutor):
         slice_pool: Optional[Any] = None,  # dist.submesh.SlicePool
         checkpoint_freq: int = 0,
         clock: Optional[Clock] = None,
+        obs: Optional[Any] = None,  # repro.obs.Observability
     ):
         self._resolve = trainable_cls_resolver
         self.ckpt = checkpoint_manager
@@ -130,12 +133,44 @@ class _SlicedExecutor(TrialExecutor):
         self.slice_pool = slice_pool
         self.checkpoint_freq = checkpoint_freq
         self.clock = clock or get_default_clock()
+        self.obs = obs or NULL_OBS
         self._slices: Dict[str, Any] = {}
+        # Pre-resolved hot-path instruments (DESIGN.md §8): with obs off each
+        # guard is a single None test.
+        m = self.obs.metrics
+        if m is not None:
+            self._m_acquire = m.histogram("pool.acquire_us")
+            self._m_ckpt_save = m.histogram("ckpt.save_us")
+            self._m_ckpt_restore = m.histogram("ckpt.restore_us")
+        else:
+            self._m_acquire = self._m_ckpt_save = self._m_ckpt_restore = None
 
     def has_resources(self, trial: Trial) -> bool:
         if self.slice_pool is not None and not self.slice_pool.can_fit(trial.resources.devices):
             return False
         return self.accountant.has_room(trial.resources)
+
+    def _acquire_slice(self, trial: Trial) -> None:
+        """Accountant + pool placement for one trial — the shared first-fit
+        hot path, timed (``pool.acquire_us``) and traced (``slice.acquire``)."""
+        self.accountant.acquire(trial.resources)
+        if self.slice_pool is None:
+            return
+        tracer = self.obs.tracer
+        if self._m_acquire is None and not tracer.enabled:
+            self._slices[trial.trial_id] = \
+                self.slice_pool.acquire(trial.resources.devices)
+            return
+        t0 = tracer.clock.time() if tracer.enabled else 0.0
+        p0 = _perf()
+        sl = self.slice_pool.acquire(trial.resources.devices)
+        if self._m_acquire is not None:
+            self._m_acquire.observe((_perf() - p0) * 1e6)
+        self._slices[trial.trial_id] = sl
+        if tracer.enabled:
+            tracer.record("slice.acquire", trial.trial_id, t0,
+                          tracer.clock.time() - t0, cat="placement",
+                          devices=trial.resources.devices, start=sl.start)
 
     def _instantiate(self, trial: Trial) -> Trainable:
         cls = self._resolve(trial.trainable_name)
@@ -242,7 +277,8 @@ class BusDrivenExecutor(_SlicedExecutor):
 
     def __init__(self, *args, event_bus: Optional[EventBus] = None, **kwargs):
         super().__init__(*args, **kwargs)
-        self.bus = event_bus or EventBus(clock=self.clock)
+        self.bus = event_bus or EventBus(clock=self.clock,
+                                         metrics=self.obs.metrics)
         self._workers: Dict[str, Any] = {}
         self._monitor_thread: Optional[Any] = None
         self._event_wait_bound = 60.0
@@ -300,14 +336,19 @@ class SerialMeshExecutor(_SlicedExecutor):
     def start_trial(self, trial: Trial, checkpoint: Optional[Checkpoint] = None) -> bool:
         if not self.has_resources(trial):
             return False
-        self.accountant.acquire(trial.resources)
-        if self.slice_pool is not None:
-            self._slices[trial.trial_id] = self.slice_pool.acquire(trial.resources.devices)
+        self._acquire_slice(trial)
+        tracer = self.obs.tracer
         try:
-            trainable = self._instantiate(trial)
+            with tracer.span("build", trial.trial_id, cat="lifecycle"):
+                trainable = self._instantiate(trial)
             if checkpoint is not None:
-                state = self.ckpt.restore(checkpoint)
-                trainable.restore(state)
+                with tracer.span("ckpt.restore", trial.trial_id, cat="ckpt",
+                                 iteration=checkpoint.training_iteration):
+                    p0 = _perf()
+                    state = self.ckpt.restore(checkpoint)
+                    trainable.restore(state)
+                if self._m_ckpt_restore is not None:
+                    self._m_ckpt_restore.observe((_perf() - p0) * 1e6)
                 trainable.iteration = checkpoint.training_iteration
                 checkpoint.pinned = False  # consumed; rotation may reclaim it
         except Exception:
@@ -336,8 +377,13 @@ class SerialMeshExecutor(_SlicedExecutor):
 
     def save_checkpoint(self, trial: Trial) -> Checkpoint:
         trainable = self._running[trial.trial_id]
-        state = trainable.save()
-        ckpt = self.ckpt.save(trial.trial_id, trainable.iteration, state)
+        with self.obs.tracer.span("ckpt.save", trial.trial_id, cat="ckpt",
+                                  iteration=trainable.iteration):
+            p0 = _perf()
+            state = trainable.save()
+            ckpt = self.ckpt.save(trial.trial_id, trainable.iteration, state)
+        if self._m_ckpt_save is not None:
+            self._m_ckpt_save.observe((_perf() - p0) * 1e6)
         trial.checkpoint = ckpt
         return ckpt
 
@@ -419,8 +465,16 @@ class SerialMeshExecutor(_SlicedExecutor):
                     pass
                 continue
             trial = self._trials[trial_id]
+            tracer = self.obs.tracer
             try:
-                metrics = trainable.train()
+                if tracer.enabled:
+                    t0 = tracer.clock.time()
+                    metrics = trainable.train()
+                    tracer.record("step", trial_id, t0,
+                                  tracer.clock.time() - t0, cat="train",
+                                  iteration=trainable.iteration)
+                else:
+                    metrics = trainable.train()
             except Exception as e:  # noqa: BLE001 — trial error, not framework error
                 return trial, e
             done = bool(metrics.pop("done", False))

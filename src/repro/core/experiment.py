@@ -171,6 +171,9 @@ def run_experiments(
     mode: Optional[str] = None,
     resume: bool = False,
     clock: Optional[Any] = None,  # repro.core.clock.Clock; None = default
+    trace: Union[None, bool, str] = None,   # Chrome trace-event JSON path
+    metrics_interval: float = 0.0,          # >0 = JSONL metrics snapshots
+    obs: Optional[Any] = None,              # pre-built repro.obs.Observability
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
 
@@ -203,7 +206,14 @@ def run_experiments(
     ``clock`` injects the time source (DESIGN.md §7) into the executor, the
     event bus, the loggers and the broker in one stroke — a ``VirtualClock``
     here runs the whole control plane on deterministic virtual time (the
-    repro.testing harness does exactly this)."""
+    repro.testing harness does exactly this).
+
+    Observability (DESIGN.md §8): ``trace="out.json"`` records per-trial spans
+    for every lifecycle phase and exports a Perfetto/chrome://tracing-viewable
+    Chrome trace on completion; ``metrics_interval=S`` turns on the metrics
+    registry and (with ``log_dir``) snapshots it to ``log_dir/metrics.jsonl``
+    every S clock-seconds, plus a status table at experiment end.  Pass a
+    pre-built ``repro.obs.Observability`` via ``obs`` to control both."""
     from .clock import get_default_clock
     clock = clock or get_default_clock()
     scheduler = scheduler or FIFOScheduler()
@@ -231,6 +241,18 @@ def run_experiments(
         except KeyError as e:
             raise ValueError(str(e)) from None
 
+    # -- observability (repro.obs, DESIGN.md §8) -----------------------------------
+    if obs is None and (trace or metrics_interval > 0):
+        from ..obs import Observability
+        metrics_target: Any = metrics_interval > 0
+        if metrics_target and log_dir:
+            metrics_target = os.path.join(log_dir, "metrics.jsonl")
+        obs = Observability(trace=trace, metrics=metrics_target,
+                            metrics_interval=metrics_interval or 10.0,
+                            clock=clock)
+    from ..obs import NULL_OBS
+    obs = obs or NULL_OBS
+
     # -- plumbing ------------------------------------------------------------------
     store = ObjectStore(spill_dir=os.path.join(log_dir, "spill") if log_dir else None)
     ckpt_mgr = CheckpointManager(store,
@@ -246,6 +268,7 @@ def run_experiments(
             slice_pool=slice_pool,
             checkpoint_freq=checkpoint_freq,
             clock=clock,
+            obs=obs,
         )
         if kind == "serial":
             executor = SerialMeshExecutor(**common)
@@ -261,11 +284,14 @@ def run_experiments(
                 f"unknown executor {kind!r}; pass 'serial', 'concurrent', "
                 f"'process', or a TrialExecutor instance (VmapExecutor needs "
                 f"a VectorTrainableSpec)")
-    loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock)]
+    exec_kind = (executor if isinstance(executor, str)
+                 else type(executor).__name__)
+    loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock,
+                                           obs=obs if obs.active else None)]
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
         loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl"),
-                                   clock=clock))
+                                   clock=clock, executor=exec_kind))
     logger = CompositeLogger(loggers)
 
     broker = None
@@ -285,6 +311,7 @@ def run_experiments(
         max_failures=max_failures,
         max_experiment_failures=max_experiment_failures,
         broker=broker,
+        obs=obs,
     )
     if log_dir:
         import weakref
@@ -315,5 +342,6 @@ def run_experiments(
         raise ValueError("provide a space, a searcher, or both")
 
     trials = runner.run(max_steps=max_steps)
+    obs.close(executor)  # final metrics snapshot + Chrome trace export
     logger.close()
     return ExperimentAnalysis(trials, metric=metric, mode=mode)

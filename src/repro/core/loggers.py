@@ -37,30 +37,91 @@ class Logger:
 
 class ConsoleLogger(Logger):
     def __init__(self, interval_s: float = 5.0, stream: Optional[TextIO] = None,
-                 verbose: bool = True, clock: Optional[Clock] = None):
+                 verbose: bool = True, clock: Optional[Clock] = None,
+                 obs: Optional[Any] = None):
         self.interval_s = interval_s
         self.stream = stream or sys.stdout
         self.verbose = verbose
         self.clock = clock or get_default_clock()
+        self.obs = obs  # repro.obs.Observability; enables the status table
         self._last = 0.0
         self._n_results = 0
+        self._pending: Optional[tuple] = None  # last throttled (trial_id, result)
+
+    def _emit(self, trial_id: str, result: Result) -> None:
+        metrics = ", ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in list(result.metrics.items())[:4]
+        )
+        print(f"[tune] {trial_id} iter={result.training_iteration} {metrics}",
+              file=self.stream)
 
     def on_result(self, trial: Trial, result: Result) -> None:
         self._n_results += 1
+        if not self.verbose:
+            return
         # Flush throttling reads the injected clock, so a virtual-time run
         # prints on virtual seconds (and tests can drive the throttle
         # deterministically) instead of real-time wall gaps.
         now = self.clock.time()
-        if self.verbose and now - self._last >= self.interval_s:
+        if now - self._last >= self.interval_s:
             self._last = now
-            metrics = ", ".join(
-                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
-                for k, v in list(result.metrics.items())[:4]
-            )
-            print(
-                f"[tune] {trial.trial_id} iter={result.training_iteration} {metrics}",
-                file=self.stream,
-            )
+            self._pending = None
+            self._emit(trial.trial_id, result)
+        else:
+            # Throttled: remember it so a final flush() can still report the
+            # run's last status instead of silently dropping it.
+            self._pending = (trial.trial_id, result)
+
+    def flush(self) -> None:
+        """Emit the last throttled result (and the metrics status table when
+        an Observability bundle is attached) even inside the throttle window.
+        The runner calls this at experiment end — the final status of a run
+        must never be lost to the throttle."""
+        if not self.verbose:
+            return
+        if self._pending is not None:
+            trial_id, result = self._pending
+            self._pending = None
+            self._last = self.clock.time()
+            self._emit(trial_id, result)
+        if self.obs is not None and self.obs.metrics is not None:
+            for line in self.status_table().splitlines():
+                print(line, file=self.stream)
+
+    def status_table(self) -> str:
+        """Compact control-plane status table from the attached metrics
+        registry (DESIGN.md §8).  Empty string when no registry is attached."""
+        if self.obs is None or self.obs.metrics is None:
+            return ""
+        snap = self.obs.metrics.snapshot()
+
+        def c(name: str) -> Any:
+            v = snap.get(name, 0)
+            return v if not isinstance(v, dict) else v.get("count", 0)
+
+        def mean_us(name: str) -> str:
+            v = snap.get(name)
+            if not isinstance(v, dict) or not v.get("count"):
+                return "-"
+            return f"{v['mean']:.1f}us"
+
+        return "\n".join([
+            "[tune] --- control-plane status ---",
+            f"[tune] events: results={c('events.result')} "
+            f"errors={c('events.error')} restarts={c('trials.restarts')} "
+            f"kills={c('events.killed')} resizes={c('trials.resized')}",
+            f"[tune] bus: published={c('bus.published')} depth={c('bus.depth')} "
+            f"fanin={mean_us('bus.fanin_us')}",
+            f"[tune] sched: choose={mean_us('sched.choose_us')} "
+            f"decision={mean_us('sched.decision_us')}",
+            f"[tune] pool: util={snap.get('pool.utilization', 0)} "
+            f"fragments={snap.get('pool.fragments', 0)} "
+            f"acquire={mean_us('pool.acquire_us')}",
+            f"[tune] ckpt: saves={c('ckpt.save_us')} "
+            f"save={mean_us('ckpt.save_us')} "
+            f"restore={mean_us('ckpt.restore_us')}",
+        ])
 
     def on_event(self, trial: Trial, event: Any) -> None:
         if not self.verbose:
@@ -105,6 +166,7 @@ class ConsoleLogger(Logger):
                   file=self.stream)
 
     def on_experiment_end(self, trials: List[Trial]) -> None:
+        self.flush()  # always surface the run's final status (satellite fix)
         if not self.verbose:
             return
         from .trial import TrialStatus
@@ -142,10 +204,34 @@ class CSVLogger(Logger):
 
 
 class JSONLLogger(Logger):
-    def __init__(self, path: str, clock: Optional[Clock] = None):
+    """Experiment-level JSONL event log.
+
+    The stream opens with a ``run_header`` record carrying the schema version,
+    a run id, the clock type, and the executor tier, so a detached reader can
+    interpret the stream without the producing process.  Readers must stay
+    unknown-field (and unknown-record) tolerant: filter on ``event`` and
+    ignore keys you don't know — that is what keeps pre-header readers of the
+    v1 stream working against v2 files.
+    """
+
+    SCHEMA_VERSION = 2
+
+    def __init__(self, path: str, clock: Optional[Clock] = None,
+                 run_id: Optional[str] = None, executor: Optional[str] = None):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.clock = clock or get_default_clock()
+        t0 = self.clock.time()
+        self.run_id = run_id or f"run-{int(t0)}-{os.getpid()}"
         self.f = open(path, "w")
+        self.f.write(json.dumps({
+            "event": "run_header",
+            "schema_version": self.SCHEMA_VERSION,
+            "run_id": self.run_id,
+            "clock": type(self.clock).__name__,
+            "executor": executor,
+            "t": t0,
+        }) + "\n")
+        self.f.flush()
 
     def on_result(self, trial: Trial, result: Result) -> None:
         self.f.write(json.dumps({

@@ -109,6 +109,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         mp_context: Optional[str] = None,   # None = forkserver-preloaded/spawn
         worker_nice: int = 1,               # children yield to the control plane
         clock: Optional[Clock] = None,      # deadline math only; children stay wall
+        obs: Optional[Any] = None,
     ):
         # trainable_cls_resolver is accepted for signature parity with the
         # in-host executors but never used to instantiate: the child rebuilds
@@ -119,7 +120,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         super().__init__(trainable_cls_resolver or (lambda name: None),
                          checkpoint_manager, total_cpu, total_devices,
                          slice_pool, checkpoint_freq, event_bus=event_bus,
-                         clock=clock)
+                         clock=clock, obs=obs)
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_deadline = straggler_deadline
         self.join_timeout = join_timeout
@@ -243,6 +244,12 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             ws.trial.checkpoint = ckpt
             self.bus.publish(TrialEvent(
                 EventType.CHECKPOINTED, trial_id, checkpoint=ckpt))
+        elif kind == _w.MSG_SPANS:
+            # Child-side trace spans (build/step/ckpt.*): republish on the bus
+            # so the runner's obs adopts them onto the parent trace — the
+            # child's spans nest inside the trial's lifecycle span.
+            self.bus.publish(TrialEvent(
+                EventType.SPAN, trial_id, info={"spans": msg[1]}))
         elif kind == _w.MSG_ERROR:
             ws.dead = True
             ws.in_step = False
@@ -350,15 +357,14 @@ class ProcessMeshExecutor(BusDrivenExecutor):
                 trial.set_status(TrialStatus.ERROR)
                 return False
             restore_iter = checkpoint.training_iteration
-        self.accountant.acquire(trial.resources)
-        if self.slice_pool is not None:
-            self._slices[trial.trial_id] = self.slice_pool.acquire(trial.resources.devices)
+        self._acquire_slice(trial)
         try:
             worker = ProcessWorker(
                 factory, trial.trial_id, self._worker_config(trial),
                 self._spill_dir, checkpoint_freq=self.checkpoint_freq,
                 restore_key=restore_key, restore_iteration=restore_iter,
-                mp_context=self.mp_context, nice=self.worker_nice)
+                mp_context=self.mp_context, nice=self.worker_nice,
+                trace=self.obs.tracer.enabled)
         except Exception:  # noqa: BLE001 — unpicklable config, spawn failure, ...
             self._release(trial)
             trial.error = traceback.format_exc()

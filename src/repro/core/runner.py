@@ -15,8 +15,10 @@ marked ERROR, and the experiment aborts when errored trials exceed
 from __future__ import annotations
 
 import itertools
+from time import perf_counter as _perf
 from typing import Any, Dict, List, Optional
 
+from ..obs import NULL_OBS
 from .events import EventType, TrialEvent
 from .executor import TrialExecutor
 from .loggers import Logger
@@ -42,9 +44,19 @@ class TrialRunner:
         max_failures: int = 0,               # per-trial restarts-from-checkpoint
         max_experiment_failures: int = 0,    # 0 = unlimited errored trials
         broker: Optional[Any] = None,        # elastic.ResourceBroker (DESIGN.md §6)
+        obs: Optional[Any] = None,           # repro.obs.Observability (§8)
     ):
         self.scheduler = scheduler
         self.executor = executor
+        self.obs = obs or NULL_OBS
+        # Pre-resolved hot-path instruments (one None test per use when off).
+        m = self.obs.metrics
+        if m is not None:
+            self._m_choose = m.histogram("sched.choose_us")
+            self._m_decide = m.histogram("sched.decision_us")
+            self._m_restarts = m.counter("trials.restarts")
+        else:
+            self._m_choose = self._m_decide = self._m_restarts = None
         self.searcher = searcher
         self.logger = logger or Logger()
         self.trainable_name = trainable_name
@@ -79,6 +91,7 @@ class TrialRunner:
 
     def stop_trial(self, trial: Trial) -> None:
         self.executor.stop_trial(trial)
+        self.obs.tracer.end(("trial", trial.trial_id), status=trial.status.name)
         self.scheduler.on_trial_complete(self, trial)
         self.logger.on_trial_complete(trial)
         self._observe(trial, final=True)
@@ -133,23 +146,46 @@ class TrialRunner:
             return False
         return True
 
+    def _choose(self) -> Optional[Trial]:
+        """``choose_trial_to_run``, timed into ``sched.choose_us`` — one of
+        the three profiled control-plane hot paths (DESIGN.md §8)."""
+        if self._m_choose is None:
+            return self.scheduler.choose_trial_to_run(self)
+        p0 = _perf()
+        trial = self.scheduler.choose_trial_to_run(self)
+        self._m_choose.observe((_perf() - p0) * 1e6)
+        return trial
+
     def _launch_loop(self) -> None:
+        tracer = self.obs.tracer
         while True:
-            trial = self.scheduler.choose_trial_to_run(self)
+            t_dec = tracer.clock.time() if tracer.enabled else 0.0
+            trial = self._choose()
             if trial is None:
                 suggested = self._maybe_suggest()
                 if suggested is None:
                     return
-                trial = self.scheduler.choose_trial_to_run(self)
+                trial = self._choose()
                 if trial is None:
                     return
+            if tracer.enabled:
+                tracer.record("schedule.decision", trial.trial_id, t_dec,
+                              tracer.clock.time() - t_dec, cat="sched")
             checkpoint = trial.checkpoint if trial.status == TrialStatus.PAUSED else None
+            restored = checkpoint is not None
             ok = self.executor.start_trial(trial, checkpoint=checkpoint)
             if not ok:
                 if trial.status == TrialStatus.ERROR:
                     self._finalize_error(trial)
                     continue
                 return  # no resources after all
+            if tracer.enabled:
+                # The trial's lifecycle span: opened per (re)launch, closed at
+                # stop/pause/requeue — every other span of this trial nests
+                # inside it on the trace row.
+                tracer.begin(("trial", trial.trial_id), "trial",
+                             trial.trial_id, cat="lifecycle",
+                             trainable=trial.trainable_name, restored=restored)
 
     def step(self) -> bool:
         """Process one event. Returns False when the experiment is finished."""
@@ -168,6 +204,12 @@ class TrialRunner:
                 return True
             return False
         self._stall_count = 0
+        self.obs.on_event(event)          # count + adopt shipped SPAN batches
+        self.obs.maybe_snapshot(self.executor)
+        if event.type == EventType.SPAN:
+            # Spans live in the trace export, not the event log — fully
+            # consumed by obs.on_event above.
+            return not self.is_finished()
         trial = self.get_trial(event.trial_id)
         if trial is None:  # event for a trial this runner never adopted
             return not self.is_finished()
@@ -198,7 +240,12 @@ class TrialRunner:
             self.stop_trial(trial)
             return not self.is_finished()
 
-        decision = self.scheduler.on_result(self, trial, result)
+        if self._m_decide is None:
+            decision = self.scheduler.on_result(self, trial, result)
+        else:
+            p0 = _perf()
+            decision = self.scheduler.on_result(self, trial, result)
+            self._m_decide.observe((_perf() - p0) * 1e6)
         self._observe(trial, final=False)
         self._apply(trial, decision)
         return not self.is_finished()
@@ -217,11 +264,21 @@ class TrialRunner:
             and trial.num_failures <= self.max_failures
             and not trial.status.is_finished()
         )
+        tracer = self.obs.tracer
         if retryable:
             # Tear down the dead instance; the trial re-enters the launch loop
             # PAUSED (restore from last checkpoint) or PENDING (from scratch).
             self.n_restarts += 1
+            if self._m_restarts is not None:
+                self._m_restarts.inc()
             self.executor.requeue_trial(trial)
+            tracer.end(("trial", trial.trial_id), status="REQUEUED")
+            if tracer.enabled:
+                # Instant marker: the fault boundary between two lifecycle
+                # spans of the same trial.
+                tracer.record("restart", trial.trial_id, tracer.clock.time(),
+                              0.0, cat="fault",
+                              num_failures=trial.num_failures)
             clock = getattr(self.executor, "clock", None)
             self.logger.on_event(trial, TrialEvent(
                 EventType.RESTARTED, trial.trial_id, error=error,
@@ -233,6 +290,7 @@ class TrialRunner:
                       "error": error[-2000:]}))
             return True
         self.executor.stop_trial(trial, error=error)
+        tracer.end(("trial", trial.trial_id), status="ERROR")
         self._finalize_error(trial)
         return not self.is_finished()
 
@@ -259,6 +317,7 @@ class TrialRunner:
             return
         if decision == SchedulerDecision.PAUSE:
             self.executor.pause_trial(trial)
+            self.obs.tracer.end(("trial", trial.trial_id), status="PAUSED")
         elif decision == SchedulerDecision.STOP:
             self.stop_trial(trial)
         elif decision == SchedulerDecision.RESTART_WITH_CONFIG:

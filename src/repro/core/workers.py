@@ -42,6 +42,7 @@ import multiprocessing as mp
 import os
 import sys
 import threading
+import time as _time
 import traceback
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -73,6 +74,7 @@ MSG_RESET = "RESET"
 MSG_RESIZED = "RESIZED"
 MSG_STOPPED = "STOPPED"
 MSG_ERROR = "ERROR"
+MSG_SPANS = "SPANS"  # batch of trace spans (repro.obs wire tuples)
 
 
 @dataclass(frozen=True)
@@ -180,6 +182,19 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
     """
     trial_id = spec["trial_id"]
     checkpoint_freq = int(spec.get("checkpoint_freq", 0))
+    # Child-side tracing (repro.obs): spans are buffered and shipped as ONE
+    # MSG_SPANS before the reply they annotate, so the parent's pump adopts
+    # them onto the trial's trace row before processing the result.  The
+    # child has no injected clock — timestamps are wall time; the process
+    # tier never runs under a VirtualClock (DESIGN.md §5/§8).
+    trace_on = bool(spec.get("trace"))
+    spans: list = []
+
+    def _flush_spans() -> None:
+        if spans:
+            conn.send((MSG_SPANS, list(spans)))
+            spans.clear()
+
     try:
         nice = int(spec.get("nice", 0))
         if nice > 0 and hasattr(os, "nice"):
@@ -188,14 +203,24 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
             # to turn a RESULT into the next STEP, or every worker idles at
             # the gate for an OS scheduling quantum per step.
             os.nice(nice)
+        t_build = _time.time()
         store = _child_store(spec)
         cls = spec["factory"].resolve()
         trainable = cls(dict(spec["config"]))
         restore_key = spec.get("restore_key")
         if restore_key:
+            t_res = _time.time()
             trainable.restore(_decode_state(store.get(restore_key)))
             trainable.iteration = int(spec.get("restore_iteration", 0))
             _consume_key(store, restore_key)
+            if trace_on:
+                spans.append(("ckpt.restore", t_res, _time.time() - t_res,
+                              "ckpt", "worker",
+                              {"iteration": trainable.iteration}))
+        if trace_on:
+            spans.append(("build", t_build, _time.time() - t_build,
+                          "lifecycle", "worker", {"pid": os.getpid()}))
+            _flush_spans()
         conn.send((MSG_READY, os.getpid()))
     except BaseException:  # noqa: BLE001 — report the build failure, then exit
         try:
@@ -208,13 +233,19 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
 
     def _save_bytes() -> str:
         from .checkpoint import tree_to_bytes
+        t0 = _time.time()
         data = tree_to_bytes(trainable.save())
         # Key is unique per save, not just per iteration: a PBT rewind makes a
         # worker re-reach the same iteration and save again, and reusing the
         # key would let the host's LRU serve the stale first payload (and let
         # keep_last rotation of the old Checkpoint delete the new one's data).
         key = f"ckpt/{trial_id}/{trainable.iteration}.{os.getpid()}.{next(save_seq)}"
-        return store.put_spilled(data, key=key)
+        key = store.put_spilled(data, key=key)
+        if trace_on:
+            spans.append(("ckpt.save", t0, _time.time() - t0, "ckpt",
+                          "worker", {"iteration": trainable.iteration,
+                                     "bytes": len(data)}))
+        return key
 
     done_seen = False
     queued_steps = 0
@@ -241,7 +272,13 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
                         # finished trainable would be an error; drop them.
                         continue
                     try:
+                        t_step = _time.time()
                         metrics = dict(trainable.train())
+                        if trace_on:
+                            spans.append(("step", t_step,
+                                          _time.time() - t_step, "train",
+                                          "worker",
+                                          {"iteration": trainable.iteration}))
                         done = bool(metrics.pop("done", False))
                         if (checkpoint_freq and not done
                                 and trainable.iteration % checkpoint_freq == 0):
@@ -251,6 +288,7 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
                         conn.send((MSG_ERROR, traceback.format_exc()))
                         return
                     done_seen = done
+                    _flush_spans()
                     conn.send((MSG_RESULT, trainable.iteration, metrics, done))
                     continue
                 nxt = conn.recv()
@@ -293,16 +331,24 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
                     conn.send((MSG_RESIZED, True, None))
             elif cmd == CMD_SAVE:
                 try:
-                    conn.send((MSG_SAVED, _save_bytes(), trainable.iteration))
+                    key = _save_bytes()
+                    _flush_spans()
+                    conn.send((MSG_SAVED, key, trainable.iteration))
                 except Exception:  # noqa: BLE001
                     conn.send((MSG_ERROR, traceback.format_exc()))
                     return
             elif cmd == CMD_RESTORE:
                 _, key, iteration = msg
                 try:
+                    t_res = _time.time()
                     trainable.restore(_decode_state(store.get(key)))
                     trainable.iteration = int(iteration)
                     _consume_key(store, key)
+                    if trace_on:
+                        spans.append(("ckpt.restore", t_res,
+                                      _time.time() - t_res, "ckpt", "worker",
+                                      {"iteration": int(iteration)}))
+                        _flush_spans()
                     conn.send((MSG_RESTORED, int(iteration)))
                 except Exception:  # noqa: BLE001
                     conn.send((MSG_ERROR, traceback.format_exc()))
@@ -386,6 +432,7 @@ class ProcessWorker:
         restore_iteration: int = 0,
         mp_context: Optional[str] = None,
         nice: int = 1,
+        trace: bool = False,
     ):
         spec = {
             "factory": factory,
@@ -396,6 +443,7 @@ class ProcessWorker:
             "restore_key": restore_key,
             "restore_iteration": restore_iteration,
             "nice": nice,
+            "trace": trace,
         }
         ctx = mp.get_context(mp_context) if mp_context else _default_context()
         self.conn, child_conn = ctx.Pipe(duplex=True)

@@ -20,6 +20,21 @@ slices of early-stopped trials are absorbed by survivors at their next
 checkpoint boundary (``fair`` rebalances instead); ``--lookahead K`` lets
 workers run K results ahead of the scheduler on throughput-bound FIFO
 sweeps (auto-clamped to 1 for schedulers that stop/perturb trials).
+
+Observability (DESIGN.md §8) quickstart::
+
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
+        --scheduler asha --num-samples 8 --executor concurrent \
+        --trace trace.json --metrics-interval 5 --log-dir runs/demo
+
+``--trace PATH`` records a span for every lifecycle phase (schedule decision,
+slice acquire, build, step, checkpoint save/restore, resize, restart) and
+exports Chrome trace-event JSON at PATH — open it in Perfetto
+(https://ui.perfetto.dev) or chrome://tracing.  ``--metrics-interval S``
+snapshots the control-plane metrics registry (bus depth/fan-in latency,
+scheduler decision latency, pool utilization, checkpoint bytes+latency,
+restart/kill/resize counters) every S seconds to ``<log-dir>/metrics.jsonl``
+and prints a status table at experiment end.
 """
 from __future__ import annotations
 
@@ -139,6 +154,15 @@ def main() -> None:
                          "step for process workers); automatically clamped to "
                          "1 unless the scheduler never stops/perturbs trials "
                          "(fifo)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace-event JSON of every control-"
+                         "plane span (schedule decision, slice acquire, "
+                         "build, step, ckpt save/restore, resize, restart) "
+                         "to PATH; view in Perfetto or chrome://tracing")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="snapshot the control-plane metrics registry every "
+                         "S seconds to <log-dir>/metrics.jsonl and print a "
+                         "status table at experiment end (0 disables)")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -192,6 +216,8 @@ def main() -> None:
         straggler_deadline=args.straggler_deadline,
         elastic=args.elastic,
         lookahead=args.lookahead,
+        trace=args.trace,
+        metrics_interval=args.metrics_interval,
         log_dir=args.log_dir,
         verbose=True,
         seed=args.seed,

@@ -105,18 +105,28 @@ def run_scenario(
     pool_devices: int = 16,
     lookahead: int = 1,
     max_steps: int = 10_000_000,
+    obs: Optional[Any] = None,
+    token: Optional[str] = None,
 ) -> ScenarioResult:
     """Run one scenario on a fresh ``VirtualClock`` to completion.
 
     ``executor="serial"`` is the reference tier for equivalence checks; with
     ``pool_devices=1`` both tiers execute trials one at a time, so their
     event streams — and every scheduler decision — must coincide exactly.
+
+    ``obs`` attaches a ``repro.obs.Observability`` bundle (tracing/metrics)
+    to the stack.  ``token`` overrides the run nonce baked into trial ids —
+    pass a fixed token to make trial ids (hence trace ids) identical across
+    runs, which is what the byte-identical-trace determinism tests and
+    ``bench_faults`` rely on.
     """
     import time as _wall
 
-    token = f"{scenario.name}-{next(_token_counter)}"
+    token = token if token is not None else f"{scenario.name}-{next(_token_counter)}"
     reset_faults()
     clock = VirtualClock()
+    if obs is not None:
+        obs.bind_clock(clock)  # span timestamps must ride the virtual axis
     pool = SlicePool(n_virtual=pool_devices)
     recorder = RecordingLogger()
     t0 = _wall.monotonic()
@@ -131,6 +141,7 @@ def run_scenario(
             slice_pool=pool,
             checkpoint_freq=1,
             clock=clock,
+            obs=obs,
         )
         if executor == "serial":
             ex = SerialMeshExecutor(**common)
@@ -152,6 +163,7 @@ def run_scenario(
             stopping_criteria={"training_iteration": scenario.stop_iteration},
             max_failures=scenario.max_failures,
             broker=broker,
+            obs=obs,
         )
         for i, config in enumerate(scenario.configs):
             cfg = dict(config)

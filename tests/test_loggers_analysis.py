@@ -41,9 +41,10 @@ class TestLoggers:
         lg.on_trial_complete(t)
         lg.close()
         events = [json.loads(l) for l in open(path)]
-        assert [e["event"] for e in events] == ["result", "complete"]
-        assert events[0]["metrics"]["loss"] == 0.5
-        assert events[1]["status"] == "TERMINATED"
+        assert [e["event"] for e in events] == ["run_header", "result", "complete"]
+        assert events[0]["schema_version"] == JSONLLogger.SCHEMA_VERSION
+        assert events[1]["metrics"]["loss"] == 0.5
+        assert events[2]["status"] == "TERMINATED"
 
     def test_jsonl_skips_non_json_values(self, tmp_path):
         path = str(tmp_path / "e.jsonl")
@@ -51,7 +52,8 @@ class TestLoggers:
         t = Trial({"lr": 0.1, "obj": object()})
         lg.on_result(t, Result(t.trial_id, 1, {"loss": 0.5, "arr": np.ones(3)}))
         lg.close()
-        ev = json.loads(open(path).readline())
+        ev = [json.loads(l) for l in open(path)
+              if json.loads(l)["event"] == "result"][0]
         assert "obj" not in ev["config"] and "arr" not in ev["metrics"]
 
     def test_console_quiet(self, capsys):
@@ -83,7 +85,9 @@ class TestLoggersOnVirtualClock:
         # the logger's own clock supplies the time — the fallback path.
         lg.on_event(t, TrialEvent(EventType.RESTARTED, t.trial_id))
         lg.close()
-        stamped, fallback = [json.loads(l) for l in open(path)]
+        header, stamped, fallback = [json.loads(l) for l in open(path)]
+        assert header["event"] == "run_header"
+        assert header["clock"] == "VirtualClock"
         assert stamped["event"] == "heartbeat_missed"
         assert stamped["t"] == pytest.approx(vc._epoch + 100.0)
         assert fallback["event"] == "restarted"
