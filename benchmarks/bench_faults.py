@@ -61,11 +61,13 @@ GATE_MARGIN = 3.0  # x over baseline us_per_event: hardware noise, not drift
 
 def run_storm(n_trials: int, pool_devices: int = 64, seed: int = 0,
               obs: Optional[Observability] = None,
-              label: str = "disabled") -> Dict[str, Any]:
+              label: str = "disabled",
+              journal_path: Optional[str] = None) -> Dict[str, Any]:
     scenario = crash_storm(n_trials=n_trials, seed=seed)
     res = run_scenario(scenario, lambda: FIFOScheduler(metric="loss", mode="min"),
                        executor="concurrent", pool_devices=pool_devices,
-                       obs=obs, token=f"bench-faults-{label}-{n_trials}")
+                       obs=obs, token=f"bench-faults-{label}-{n_trials}",
+                       journal_path=journal_path)
     if obs is not None:
         obs.close(res.executor)
     trials = res.trials
@@ -123,13 +125,16 @@ def run(n_trials: int = 10_000, artifact_trials: int = 500,
           f"{row['us_per_event']:.1f} us/event over {row['n_events']} events")
     rows.append(row)
 
-    # Observability-on artifact run: Chrome trace + metrics JSONL for CI.
+    # Observability-on artifact run: Chrome trace + metrics JSONL + JSONL
+    # journal for CI (the journal feeds the repro.launch.report smoke step).
     os.makedirs(OUT_DIR, exist_ok=True)
     trace_path = os.path.join(OUT_DIR, "bench_faults_trace.json")
     metrics_path = os.path.join(OUT_DIR, "bench_faults_metrics.jsonl")
+    journal_path = os.path.join(OUT_DIR, "bench_faults_events.jsonl")
     obs = Observability(trace=trace_path, metrics=metrics_path,
                         metrics_interval=60.0)
-    traced = run_storm(artifact_trials, pool_devices, obs=obs, label="traced")
+    traced = run_storm(artifact_trials, pool_devices, obs=obs, label="traced",
+                       journal_path=journal_path)
     base = run_storm(artifact_trials, pool_devices, label="disabled-small")
     traced["enabled_overhead_x"] = round(
         traced["us_per_event"] / max(base["us_per_event"], 1e-9), 2)

@@ -42,7 +42,7 @@ class NoopTrainable(Trainable):
 
 
 def _event_loop_us(n_trials: int, obs: Optional[Observability] = None,
-                   reps: int = 3) -> float:
+                   reps: int = 3, logger=None) -> float:
     """Best-of-``reps`` microseconds per result through the serial event loop
     (best-of filters host scheduling noise out of a ~10ms-granularity wall)."""
     best = float("inf")
@@ -51,9 +51,10 @@ def _event_loop_us(n_trials: int, obs: Optional[Observability] = None,
                                       CheckpointManager(ObjectStore()),
                                       total_devices=n_trials, checkpoint_freq=0,
                                       obs=obs)
+        kw = {} if logger is None else {"logger": logger()}
         runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
                              stopping_criteria={"training_iteration": 50},
-                             obs=obs)
+                             obs=obs, **kw)
         for i in range(n_trials):
             runner.add_trial(Trial({}, stopping_criteria={"training_iteration": 50}))
         t0 = time.time()
@@ -85,6 +86,21 @@ def run() -> List[Dict]:
                  "us_per_result": round(us_on, 2)})
     emit("overhead/event_loop_obs_enabled_n64", us_on,
          f"{ratio:.2f}x disabled ({us_off:.1f}us)")
+
+    # LiveReporter attached (DESIGN.md §9 acceptance: within 2x of obs-off).
+    # The table renders to a sink and its clock throttle caps renders, so the
+    # per-result cost is the dict bookkeeping, not terminal I/O.
+    import io
+
+    from repro.core.loggers import LiveReporter
+    us_live = _event_loop_us(
+        64, logger=lambda: LiveReporter(metric="loss", stream=io.StringIO()))
+    live_ratio = us_live / max(us_off, 1e-9)
+    rows.append({"bench": "event_loop_live_reporter", "n_trials": 64,
+                 "results_per_s": round(1e6 / us_live, 1),
+                 "us_per_result": round(us_live, 2)})
+    emit("overhead/event_loop_live_reporter_n64", us_live,
+         f"{live_ratio:.2f}x disabled ({us_off:.1f}us)")
 
     # checkpoint codec on a ~10M-float pytree
     tree = {"params": {f"layer{i}": np.random.default_rng(i).standard_normal(

@@ -44,6 +44,7 @@ class EventType(str, enum.Enum):
     RESIZE_FAILED = "RESIZE_FAILED"        # resize rejected/rolled back; trial keeps its old slice
     CREDITS = "CREDITS"                    # lookahead credit grant changed for a trial
     SPAN = "SPAN"                          # batch of trace spans from a worker (repro.obs)
+    PROFILE = "PROFILE"                    # per-trial hardware profile (repro.obs, §9)
 
 
 @dataclass

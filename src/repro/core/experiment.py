@@ -21,7 +21,8 @@ from .api import Trainable, wrap_function
 from .checkpoint import CheckpointManager
 from .concurrent_executor import ConcurrentMeshExecutor
 from .executor import SerialMeshExecutor, TrialExecutor
-from .loggers import CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger, Logger
+from .loggers import (CompositeLogger, ConsoleLogger, CSVLogger, JSONLLogger,
+                      LiveReporter, Logger)
 from .object_store import ObjectStore
 from .process_executor import ProcessMeshExecutor
 from .resources import Resources
@@ -174,6 +175,8 @@ def run_experiments(
     trace: Union[None, bool, str] = None,   # Chrome trace-event JSON path
     metrics_interval: float = 0.0,          # >0 = JSONL metrics snapshots
     obs: Optional[Any] = None,              # pre-built repro.obs.Observability
+    report: Union[None, bool, str] = None,  # HTML run report (needs log_dir)
+    live_table: bool = False,               # LiveReporter trial table
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
 
@@ -213,12 +216,22 @@ def run_experiments(
     Chrome trace on completion; ``metrics_interval=S`` turns on the metrics
     registry and (with ``log_dir``) snapshots it to ``log_dir/metrics.jsonl``
     every S clock-seconds, plus a status table at experiment end.  Pass a
-    pre-built ``repro.obs.Observability`` via ``obs`` to control both."""
+    pre-built ``repro.obs.Observability`` via ``obs`` to control both.
+
+    ``report=True`` (needs ``log_dir``: the JSONL journal is the source)
+    renders the self-contained HTML run report to ``log_dir/report.html`` —
+    or to an explicit path when ``report`` is a string — after the run ends,
+    even when it ends by abort (DESIGN.md §9).  ``live_table=True`` attaches
+    a ``LiveReporter`` rendering the live trial status table, throttled on
+    the injected clock."""
     from .clock import get_default_clock
     clock = clock or get_default_clock()
     scheduler = scheduler or FIFOScheduler()
     metric = metric or scheduler.metric
     mode = mode or scheduler.mode
+    if report and not log_dir:
+        raise ValueError("report=... requires log_dir (the JSONL journal is "
+                         "the report's source)")
 
     # -- resolve trainable -------------------------------------------------------
     if isinstance(trainable, str):
@@ -288,6 +301,8 @@ def run_experiments(
                  else type(executor).__name__)
     loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock,
                                            obs=obs if obs.active else None)]
+    if live_table:
+        loggers.append(LiveReporter(metric=metric, clock=clock))
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
         loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl"),
@@ -341,7 +356,41 @@ def run_experiments(
     elif searcher is None:
         raise ValueError("provide a space, a searcher, or both")
 
-    trials = runner.run(max_steps=max_steps)
-    obs.close(executor)  # final metrics snapshot + Chrome trace export
-    logger.close()
-    return ExperimentAnalysis(trials, metric=metric, mode=mode)
+    # The teardown below runs even when the sweep aborts (max_experiment_
+    # failures, KeyboardInterrupt): traces, the metrics snapshot stream, the
+    # journal's final records, and the HTML report must survive the abort —
+    # an aborted run is exactly the one worth inspecting.
+    completed = False
+    try:
+        runner.run(max_steps=max_steps)
+        completed = True
+    finally:
+        if not completed:
+            # runner.run does both of these on its clean path; an exception
+            # skipped them.  Neither may mask the original exception.
+            try:
+                executor.shutdown()
+            except Exception:
+                pass
+            try:
+                logger.on_experiment_end(runner.trials)
+            except Exception:
+                pass
+        obs.close(executor)  # final metrics snapshot + Chrome trace export
+        logger.close()
+        if report and log_dir:
+            try:
+                from ..obs.report import build_report
+                journal = os.path.join(log_dir, "events.jsonl")
+                out = (report if isinstance(report, str)
+                       else os.path.join(log_dir, "report.html"))
+                with open(out, "w") as f:
+                    f.write(build_report(
+                        journal_path=journal, trace_path=obs.trace_path,
+                        metrics_path=obs.metrics_path,
+                        metric=metric, mode=mode))
+            except Exception:
+                if completed:
+                    raise
+                # aborting run: the abort is the story, not a report failure
+    return ExperimentAnalysis(runner.trials, metric=metric, mode=mode)

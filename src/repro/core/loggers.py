@@ -15,7 +15,8 @@ from typing import Any, Dict, List, Optional, TextIO
 from .clock import Clock, get_default_clock
 from .trial import Result, Trial
 
-__all__ = ["Logger", "ConsoleLogger", "CSVLogger", "JSONLLogger", "CompositeLogger"]
+__all__ = ["Logger", "ConsoleLogger", "CSVLogger", "JSONLLogger",
+           "CompositeLogger", "LiveReporter"]
 
 
 class Logger:
@@ -176,6 +177,116 @@ class ConsoleLogger(Logger):
             by_status[t.status.value] = by_status.get(t.status.value, 0) + 1
         print(f"[tune] experiment done: {len(trials)} trials, "
               f"{self._n_results} results, status={by_status}", file=self.stream)
+
+
+class LiveReporter(Logger):
+    """The paper's live trial table (§"monitoring of trial progress").
+
+    Renders a status table of every trial — status / iteration / last and
+    best metric / slice devices / restarts — re-drawn at most once per
+    ``interval_s`` on the injected clock, plus one unthrottled final render
+    at experiment end.  Everything printed is a pure function of trial state
+    and virtual timestamps, so a VirtualClock run renders byte-identically
+    across repeats (DESIGN.md §9); rendering cost is bounded by ``max_rows``
+    (in-flight trials take precedence, finished ones fill the remainder).
+    """
+
+    def __init__(self, metric: Optional[str] = None, interval_s: float = 5.0,
+                 stream: Optional[TextIO] = None, clock: Optional[Clock] = None,
+                 max_rows: int = 24):
+        self.metric = metric
+        self.interval_s = interval_s
+        self.stream = stream or sys.stdout
+        self.clock = clock or get_default_clock()
+        self.max_rows = max_rows
+        self._trials: Dict[str, Trial] = {}
+        self._last = None  # None = never rendered (first result renders)
+        self._dirty = False
+
+    # -- tracking ---------------------------------------------------------------
+    def _track(self, trial: Trial) -> None:
+        self._trials[trial.trial_id] = trial
+        self._dirty = True
+
+    def on_result(self, trial: Trial, result: Result) -> None:
+        self._track(trial)
+        self._maybe_render()
+
+    def on_event(self, trial: Trial, event: Any) -> None:
+        self._track(trial)
+        self._maybe_render()
+
+    def on_trial_complete(self, trial: Trial) -> None:
+        self._track(trial)
+        self._maybe_render()
+
+    def on_experiment_end(self, trials: List[Trial]) -> None:
+        for t in trials:
+            self._trials[t.trial_id] = t
+        self.render(final=True)
+
+    def _maybe_render(self) -> None:
+        now = self.clock.time()
+        if self._last is not None and now - self._last < self.interval_s:
+            return
+        self._last = now
+        self.render()
+
+    # -- rendering ---------------------------------------------------------------
+    def _metric_name(self) -> Optional[str]:
+        if self.metric is not None:
+            return self.metric
+        for t in self._trials.values():
+            if t.last_result is not None and t.last_result.metrics:
+                return next(iter(t.last_result.metrics))
+        return None
+
+    def _row(self, t: Trial, metric: Optional[str]) -> List[str]:
+        last = best = "-"
+        if metric is not None and t.last_result is not None \
+                and metric in t.last_result.metrics:
+            last = f"{t.last_result.value(metric):.4g}"
+            bv = t.best_value(metric, "min")  # display-only; both shown
+            hv = t.best_value(metric, "max")
+            best = f"{bv:.4g}/{hv:.4g}" if bv != hv else f"{bv:.4g}"
+        prof = ""
+        if t.profile:
+            prof = str(t.profile.get("dominant", ""))
+        return [
+            t.trial_id, t.status.value, str(t.training_iteration),
+            last, best, str(t.resources.devices), str(t.num_failures), prof,
+        ]
+
+    def render(self, final: bool = False) -> None:
+        if not self._dirty and not final:
+            return
+        self._dirty = False
+        metric = self._metric_name()
+        by_status: Dict[str, int] = {}
+        for t in self._trials.values():
+            by_status[t.status.value] = by_status.get(t.status.value, 0) + 1
+        counts = " ".join(f"{k}:{v}" for k, v in sorted(by_status.items()))
+        head = ["trial", "status", "iter",
+                metric or "metric", "best(min/max)", "dev", "fails", "profile"]
+        # In-flight trials first (the table is about progress), then finished
+        # ones, both in id order; cap at max_rows so 10^4-trial sweeps stay
+        # renderable.
+        live = sorted((t for t in self._trials.values()
+                       if not t.status.is_finished()), key=lambda t: t.trial_id)
+        done = sorted((t for t in self._trials.values()
+                       if t.status.is_finished()), key=lambda t: t.trial_id)
+        shown = (live + done)[: self.max_rows]
+        rows = [self._row(t, metric) for t in shown]
+        widths = [max(len(head[i]), *(len(r[i]) for r in rows)) if rows
+                  else len(head[i]) for i in range(len(head))]
+        out = [f"== trials: {len(self._trials)} ({counts}) =="]
+        out.append("  ".join(h.ljust(widths[i]) for i, h in enumerate(head)))
+        for r in rows:
+            out.append("  ".join(c.ljust(widths[i]) for i, c in enumerate(r)))
+        hidden = len(self._trials) - len(shown)
+        if hidden > 0:
+            out.append(f".. {hidden} more trial(s) not shown")
+        print("\n".join(out), file=self.stream)
 
 
 class CSVLogger(Logger):

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import itertools
 from time import perf_counter as _perf
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from ..obs import NULL_OBS
 from .events import EventType, TrialEvent
@@ -67,6 +67,18 @@ class TrialRunner:
         self.max_experiment_failures = max_experiment_failures
         self.trials: List[Trial] = []
         self._by_id: Dict[str, Trial] = {}
+        # Indexed ready-queue (DESIGN.md §9): trials bucketed by
+        # (status, resource shape) so choose_trial_to_run / is_finished cost
+        # O(#shapes) instead of scanning all n trials.  Maintained by the
+        # status listener installed on every trial in add_trial; all status
+        # transitions happen on the runner thread (executors call
+        # trial.set_status from start/stop/pause paths the runner drives), so
+        # plain dicts need no lock.  Dicts are insertion-ordered: within a
+        # bucket the head is the oldest (re)queued trial of that shape.
+        self._status_index: Dict[TrialStatus, Dict[Resources, Dict[str, Trial]]] = {
+            s: {} for s in TrialStatus}
+        self._enq_counter = itertools.count()
+        self._n_finished = 0  # TERMINATED + ERROR, kept by the listener
         self._searcher_exhausted = searcher is None
         self._suggest_counter = itertools.count()
         self.n_errors = 0
@@ -81,7 +93,62 @@ class TrialRunner:
     def add_trial(self, trial: Trial) -> None:
         self.trials.append(trial)
         self._by_id[trial.trial_id] = trial
+        trial._status_listener = self._on_status_change
+        if trial.status.is_finished():
+            self._n_finished += 1
+        self._index_insert(trial)
         self.scheduler.on_trial_add(self, trial)
+
+    # -- status index ------------------------------------------------------------
+    def _index_insert(self, trial: Trial) -> None:
+        key = (trial.status, trial.resources)
+        self._status_index[key[0]].setdefault(key[1], {})[trial.trial_id] = trial
+        # Remember the exact bucket: an elastic resize may swap
+        # trial.resources while the trial sits in a bucket keyed by the old
+        # shape, so removal must not re-derive the key from the trial.
+        trial._index_key = key
+        trial._enq_seq = next(self._enq_counter)
+
+    def _index_remove(self, trial: Trial) -> None:
+        key = getattr(trial, "_index_key", None)
+        if key is None:
+            return
+        bucket = self._status_index[key[0]].get(key[1])
+        if bucket is not None:
+            bucket.pop(trial.trial_id, None)
+        trial._index_key = None
+
+    def _on_status_change(self, trial: Trial, old: TrialStatus,
+                          new: TrialStatus) -> None:
+        self._n_finished += new.is_finished() - old.is_finished()
+        self._index_remove(trial)
+        self._index_insert(trial)
+
+    def next_ready(self, status: TrialStatus,
+                   fit: Optional[Callable[[Trial], bool]] = None
+                   ) -> Optional[Trial]:
+        """Oldest trial in ``status`` that the executor can place right now.
+
+        ``has_resources`` is a pure function of the resource shape given pool
+        state (frozen across this call), so it runs once per bucket — the
+        indexed replacement for the per-trial O(n) scan.  ``fit`` filters
+        candidates within a bucket (e.g. HyperBand's crash-requeue test);
+        oldest is by (re)queue order, so a requeued trial goes to the back of
+        the line rather than retaking its original submission slot.
+        """
+        best: Optional[Trial] = None
+        for bucket in self._status_index[status].values():
+            if not bucket:
+                continue
+            probe = next(iter(bucket.values()))
+            if not self.executor.has_resources(probe):
+                continue
+            for t in bucket.values():
+                if fit is None or fit(t):
+                    if best is None or t._enq_seq < best._enq_seq:
+                        best = t
+                    break  # bucket is ordered: first fit-passing is oldest
+        return best
 
     def get_trial(self, trial_id: str) -> Optional[Trial]:
         return self._by_id.get(trial_id)
@@ -100,7 +167,7 @@ class TrialRunner:
     def _maybe_suggest(self) -> Optional[Trial]:
         if self._searcher_exhausted:
             return None
-        live = sum(1 for t in self.trials if not t.status.is_finished())
+        live = len(self.trials) - self._n_finished
         if self.max_pending_from_searcher and live >= self.max_pending_from_searcher:
             return None
 
@@ -139,9 +206,14 @@ class TrialRunner:
     def is_finished(self) -> bool:
         if self.executor.has_running():
             return False
-        if any(t.status in (TrialStatus.PENDING, TrialStatus.PAUSED) and self.has_resources(t)
-               for t in self.trials):
-            return False
+        # One has_resources probe per (status, shape) bucket via the index —
+        # this runs after every event, so it must not scan all n trials.
+        for status in (TrialStatus.PENDING, TrialStatus.PAUSED):
+            for bucket in self._status_index[status].values():
+                if not bucket:
+                    continue
+                if self.executor.has_resources(next(iter(bucket.values()))):
+                    return False
         if not self._searcher_exhausted:
             return False
         return True
@@ -233,6 +305,16 @@ class TrialRunner:
             return not self.is_finished()
 
         result: Result = event.result
+        profile = result.metrics.pop("_profile", None)
+        if profile is not None:
+            # Hardware profile smuggled on the first result after a (re)build
+            # (train/trainable.py): publish it as trial metadata + a PROFILE
+            # event so loggers/analysis see it, and keep it out of the
+            # metric stream proper.
+            trial.profile = profile
+            self.logger.on_event(trial, TrialEvent(
+                EventType.PROFILE, trial.trial_id, info=profile,
+                timestamp=result.timestamp))
         trial.record_result(result)
         self.logger.on_result(trial, result)
 
@@ -297,6 +379,10 @@ class TrialRunner:
     def _finalize_error(self, trial: Trial) -> None:
         self.n_errors += 1
         self.scheduler.on_trial_error(self, trial)
+        # Errored trials get a final journal record too — without it the
+        # JSONL stream has no terminal marker for them and post-hoc analysis
+        # would report them as still in flight.
+        self.logger.on_trial_complete(trial)
         self._observe(trial, final=True)
         if self.max_experiment_failures and self.n_errors > self.max_experiment_failures:
             self.executor.shutdown()

@@ -74,15 +74,14 @@ class TrialScheduler:
     def choose_trial_to_run(self, runner: "TrialRunner") -> Optional[Trial]:
         """Pick the next trial to (re)launch given free resources.
 
-        Default policy: any PENDING trial, then any PAUSED trial (FIFO order).
+        Default policy: oldest-queued PENDING trial, then oldest-queued PAUSED
+        trial, via the runner's status/shape index (one ``has_resources``
+        probe per resource shape instead of an O(n) scan — DESIGN.md §9).
         """
-        for trial in runner.trials:
-            if trial.status == TrialStatus.PENDING and runner.has_resources(trial):
-                return trial
-        for trial in runner.trials:
-            if trial.status == TrialStatus.PAUSED and runner.has_resources(trial):
-                return trial
-        return None
+        trial = runner.next_ready(TrialStatus.PENDING)
+        if trial is not None:
+            return trial
+        return runner.next_ready(TrialStatus.PAUSED)
 
     def debug_string(self) -> str:
         return type(self).__name__

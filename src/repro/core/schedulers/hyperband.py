@@ -169,22 +169,19 @@ class HyperBandScheduler(TrialScheduler):
                 return t
             break  # keep queued until resources free up
         # 2. new pending trials
-        for t in runner.trials:
-            if t.status == TrialStatus.PENDING and runner.has_resources(t):
-                return t
+        t = runner.next_ready(TrialStatus.PENDING)
+        if t is not None:
+            return t
         # 3. crash-requeued members (max_failures retry): PAUSED *without* a
         # recorded milestone arrival is not waiting on a cut — it died and was
         # re-queued by the runner, and nothing else will ever relaunch it.
         # (Milestone-paused members ARE in bracket.arrived; cut survivors ride
         # the _promote queue above.)
-        for t in runner.trials:
-            if t.status != TrialStatus.PAUSED or not runner.has_resources(t):
-                continue
+        def _crash_requeued(t: Trial) -> bool:
             bracket = self._trial_bracket.get(t.trial_id)
-            if bracket is not None and t.trial_id not in bracket.arrived:
-                return t
+            return bracket is not None and t.trial_id not in bracket.arrived
         # NOT generic paused trials — paused bracket members wait for the cut.
-        return None
+        return runner.next_ready(TrialStatus.PAUSED, fit=_crash_requeued)
 
     def debug_string(self) -> str:
         lines = [f"HyperBand: eta={self.eta} R={self.max_t} ({self.n_stopped} stopped)"]

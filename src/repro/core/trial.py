@@ -98,14 +98,42 @@ class Trial:
         self.resources = resources or Resources()
         self.stopping_criteria = dict(stopping_criteria or {})
         self.tag = tag
-        self.status = TrialStatus.PENDING
+        self._status = TrialStatus.PENDING
+        # Status-transition hook (runner's indexed ready-queue).  Installed by
+        # TrialRunner.add_trial; every assignment to ``status`` notifies it, so
+        # the index can never drift from the attribute.  Dropped on pickle
+        # (__getstate__) — it closes over the runner.
+        self._status_listener = None
         self.results: List[Result] = []
         self.checkpoint: Optional[Checkpoint] = None
         self.error: Optional[str] = None
+        # Hardware profile published by the trainable (repro.obs, DESIGN.md
+        # §9): compile/steady step-time split, device-memory bytes, roofline
+        # tag.  None until the first profiled result arrives.
+        self.profile: Optional[Dict[str, Any]] = None
         self.num_failures = 0  # restarts consumed against the runner's max_failures
         self.start_time: Optional[float] = None
         # bookkeeping for schedulers (e.g. PBT perturbation history)
         self.scheduler_state: Dict[str, Any] = {}
+
+    # -- status ----------------------------------------------------------------
+    @property
+    def status(self) -> TrialStatus:
+        return self._status
+
+    @status.setter
+    def status(self, value: TrialStatus) -> None:
+        old = self._status
+        self._status = value
+        if self._status_listener is not None and old is not value:
+            self._status_listener(self, old, value)
+
+    def __getstate__(self) -> Dict[str, Any]:
+        # The listener is a bound method of the owning runner — unpicklable
+        # and wrong to resurrect (a resumed run re-attaches via add_trial).
+        state = self.__dict__.copy()
+        state["_status_listener"] = None
+        return state
 
     # -- result bookkeeping ---------------------------------------------------
     @property

@@ -21,11 +21,12 @@ checkpoint boundary (``fair`` rebalances instead); ``--lookahead K`` lets
 workers run K results ahead of the scheduler on throughput-bound FIFO
 sweeps (auto-clamped to 1 for schedulers that stop/perturb trials).
 
-Observability (DESIGN.md §8) quickstart::
+Observability (DESIGN.md §8-§9) quickstart::
 
     PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
         --scheduler asha --num-samples 8 --executor concurrent \
-        --trace trace.json --metrics-interval 5 --log-dir runs/demo
+        --trace trace.json --metrics-interval 5 --log-dir runs/demo \
+        --live-table --report
 
 ``--trace PATH`` records a span for every lifecycle phase (schedule decision,
 slice acquire, build, step, checkpoint save/restore, resize, restart) and
@@ -35,6 +36,13 @@ snapshots the control-plane metrics registry (bus depth/fan-in latency,
 scheduler decision latency, pool utilization, checkpoint bytes+latency,
 restart/kill/resize counters) every S seconds to ``<log-dir>/metrics.jsonl``
 and prints a status table at experiment end.
+
+``--live-table`` renders the paper's live trial table (status / iteration /
+metric / slice devices / restarts) as results stream in; ``--report`` writes
+the self-contained HTML run report (metric curves, lifecycle gantt, fault
+timeline, best-config table) to ``<log-dir>/report.html`` when the run ends —
+even when it aborts.  Re-render any past run's artifacts offline with
+``python -m repro.launch.report <log-dir>``.
 """
 from __future__ import annotations
 
@@ -163,9 +171,18 @@ def main() -> None:
                     help="snapshot the control-plane metrics registry every "
                          "S seconds to <log-dir>/metrics.jsonl and print a "
                          "status table at experiment end (0 disables)")
+    ap.add_argument("--live-table", action="store_true",
+                    help="render the live trial status table (status / iter / "
+                         "metric / devices / restarts) as results stream in")
+    ap.add_argument("--report", action="store_true",
+                    help="write the self-contained HTML run report to "
+                         "<log-dir>/report.html at experiment end (requires "
+                         "--log-dir; survives an aborting sweep)")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.report and not args.log_dir:
+        ap.error("--report requires --log-dir (the JSONL journal feeds it)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -219,6 +236,8 @@ def main() -> None:
         trace=args.trace,
         metrics_interval=args.metrics_interval,
         log_dir=args.log_dir,
+        report=args.report,
+        live_table=args.live_table,
         verbose=True,
         seed=args.seed,
     )

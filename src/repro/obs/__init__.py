@@ -23,12 +23,14 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, Optional
 
+from .analysis import ExperimentAnalysis, TrialRecord
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .tracing import NULL_TRACER, Span, Tracer
 
 __all__ = ["Observability", "NULL_OBS",
            "Tracer", "Span", "NULL_TRACER",
-           "MetricsRegistry", "Counter", "Gauge", "Histogram"]
+           "MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "ExperimentAnalysis", "TrialRecord"]
 
 METRICS_SCHEMA_VERSION = 1
 

@@ -1,0 +1,284 @@
+"""ExperimentAnalysis over the JSONL journal (DESIGN.md §9).
+
+``repro.core.experiment.ExperimentAnalysis`` answers queries from live Trial
+objects; this module answers the same questions from the *journal* — the
+``events.jsonl`` stream a run leaves behind — so a detached process (report
+generator, dashboard, a later resume) can reconstruct per-trial time series
+and the scheduler's decision history without the producing process.
+
+Parsing contract (mirrors JSONLLogger):
+
+- A v2 stream opens with a ``run_header`` record; v1 streams have none.
+  Readers filter on the ``event`` key and ignore unknown keys/records, so
+  both parse through one code path.
+- A crashed producer may leave a truncated final line — unparseable lines
+  are skipped, never raised on.  Every record the producer flushed before
+  dying is recovered (JSONLLogger flushes per line).
+
+Determinism contract: ``summary()``/``summary_json()`` fold only journal
+fields that are deterministic under a VirtualClock run (virtual timestamps
+included; ``run_id`` and hardware-profile wall timings excluded), serialized
+with sorted keys and fixed separators — two identical-token scenario runs
+produce byte-identical summaries (asserted in tests/test_analysis_report.py).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["TrialRecord", "ExperimentAnalysis", "DECISION_EVENTS"]
+
+# The scheduler/fault decision kinds reconstructed into per-trial timelines
+# (lowercased on the wire by JSONLLogger.on_event).
+DECISION_EVENTS = ("restarted", "resized", "resize_failed", "credits",
+                  "killed", "heartbeat_missed")
+
+_NUMERIC = (int, float)
+
+
+@dataclass
+class TrialRecord:
+    """Everything the journal says about one trial."""
+
+    trial_id: str
+    config: Dict[str, Any] = field(default_factory=dict)
+    status: Optional[str] = None          # terminal status, None = never completed
+    iterations: int = 0
+    # metric name -> [(t, training_iteration, value)] in journal order
+    series: Dict[str, List[Tuple[float, int, float]]] = field(default_factory=dict)
+    # full non-result event timeline: [(t, seq, kind, info)] in journal order
+    events: List[Tuple[float, int, str, Dict[str, Any]]] = field(default_factory=list)
+    profile: Optional[Dict[str, Any]] = None
+    n_results: int = 0
+
+    @property
+    def completed(self) -> bool:
+        return self.status is not None
+
+    def count(self, kind: str) -> int:
+        return sum(1 for _, _, k, _ in self.events if k == kind)
+
+    def last_value(self, metric: str) -> Optional[float]:
+        pts = self.series.get(metric)
+        return pts[-1][2] if pts else None
+
+    def best_value(self, metric: str, mode: str = "max") -> Optional[float]:
+        pts = self.series.get(metric)
+        if not pts:
+            return None
+        vals = [v for _, _, v in pts]
+        return max(vals) if mode == "max" else min(vals)
+
+    def decision_timeline(self) -> List[Dict[str, Any]]:
+        """RESTARTED/RESIZED/CREDITS/KILLED/... decisions, in order."""
+        return [
+            {"t": t, "seq": seq, "kind": kind, "info": info}
+            for t, seq, kind, info in self.events if kind in DECISION_EVENTS
+        ]
+
+
+class ExperimentAnalysis:
+    """Queryable view over one journal (see module docstring)."""
+
+    def __init__(self, records: Dict[str, TrialRecord],
+                 header: Optional[Dict[str, Any]] = None,
+                 n_skipped_lines: int = 0):
+        self.records = records
+        self.header = header            # None on a v1 (header-less) stream
+        self.n_skipped_lines = n_skipped_lines
+
+    # -- construction -----------------------------------------------------------
+    @classmethod
+    def from_journal(cls, path: str) -> "ExperimentAnalysis":
+        with open(path, "r") as f:
+            return cls.from_lines(f)
+
+    @classmethod
+    def from_lines(cls, lines: Iterable[str]) -> "ExperimentAnalysis":
+        records: Dict[str, TrialRecord] = {}
+        header: Optional[Dict[str, Any]] = None
+        skipped = 0
+
+        def rec(trial_id: str) -> TrialRecord:
+            r = records.get(trial_id)
+            if r is None:
+                r = records[trial_id] = TrialRecord(trial_id)
+            return r
+
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except (ValueError, TypeError):
+                skipped += 1  # truncated tail of a crashed run, or junk
+                continue
+            if not isinstance(obj, dict):
+                skipped += 1
+                continue
+            kind = obj.get("event")
+            if kind == "run_header":
+                if header is None:
+                    header = obj
+                continue
+            trial_id = obj.get("trial_id")
+            if not isinstance(trial_id, str):
+                continue  # unknown record shape: tolerated, not indexed
+            r = rec(trial_id)
+            if kind == "result":
+                r.n_results += 1
+                it = obj.get("iteration", 0)
+                if isinstance(it, _NUMERIC):
+                    r.iterations = max(r.iterations, int(it))
+                cfg = obj.get("config")
+                if isinstance(cfg, dict) and not r.config:
+                    r.config = cfg
+                t = obj.get("t", 0.0)
+                metrics = obj.get("metrics")
+                if isinstance(metrics, dict):
+                    for m, v in metrics.items():
+                        if isinstance(v, _NUMERIC) and not isinstance(v, bool):
+                            r.series.setdefault(m, []).append(
+                                (float(t), int(it), float(v)))
+            elif kind == "complete":
+                r.status = obj.get("status")
+                it = obj.get("iterations", 0)
+                if isinstance(it, _NUMERIC):
+                    r.iterations = max(r.iterations, int(it))
+            elif kind == "profile":
+                r.profile = obj.get("info") or {}
+            elif isinstance(kind, str):
+                r.events.append((
+                    float(obj.get("t", 0.0)), int(obj.get("seq", -1)),
+                    kind, obj.get("info") or {}))
+        return cls(records, header=header, n_skipped_lines=skipped)
+
+    # -- queries ---------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def trial_ids(self) -> List[str]:
+        return sorted(self.records)
+
+    def get(self, trial_id: str) -> Optional[TrialRecord]:
+        return self.records.get(trial_id)
+
+    def best_trial(self, metric: str, mode: str = "max") -> Optional[TrialRecord]:
+        if mode not in ("min", "max"):
+            raise ValueError("mode must be 'min' or 'max'")
+        best, best_v = None, None
+        for tid in sorted(self.records):  # deterministic tie-break
+            v = self.records[tid].best_value(metric, mode)
+            if v is None:
+                continue
+            if best_v is None or (v > best_v if mode == "max" else v < best_v):
+                best, best_v = self.records[tid], v
+        return best
+
+    def dataframe(self, metric: Optional[str] = None) -> Dict[str, List[Any]]:
+        """Column-oriented trial table (a dict of equal-length lists — the
+        zero-dependency stand-in for a pandas DataFrame)."""
+        cols: Dict[str, List[Any]] = {
+            "trial_id": [], "status": [], "iterations": [], "n_results": [],
+            "restarts": [], "resizes": [], "kills": [],
+        }
+        if metric is not None:
+            cols[f"last_{metric}"] = []
+            cols[f"best_{metric}"] = []
+        for tid in sorted(self.records):
+            r = self.records[tid]
+            cols["trial_id"].append(tid)
+            cols["status"].append(r.status)
+            cols["iterations"].append(r.iterations)
+            cols["n_results"].append(r.n_results)
+            cols["restarts"].append(r.count("restarted"))
+            cols["resizes"].append(r.count("resized"))
+            cols["kills"].append(r.count("killed"))
+            if metric is not None:
+                cols[f"last_{metric}"].append(r.last_value(metric))
+                cols[f"best_{metric}"].append(r.best_value(metric, "max"))
+        return cols
+
+    def decision_timeline(self, trial_id: str) -> List[Dict[str, Any]]:
+        r = self.records.get(trial_id)
+        return r.decision_timeline() if r is not None else []
+
+    def status_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.records.values():
+            key = r.status or "(in flight)"
+            counts[key] = counts.get(key, 0) + 1
+        return dict(sorted(counts.items()))
+
+    # -- cross-run diff ---------------------------------------------------------
+    def diff(self, other: "ExperimentAnalysis",
+             metric: Optional[str] = None) -> Dict[str, Any]:
+        """Compare two journals trial-by-trial.  Runs produced with the same
+        scenario ``token`` (repro.testing) share trial ids, so the alignment
+        is exact; for ad-hoc runs only the id intersection is compared."""
+        mine, theirs = set(self.records), set(other.records)
+        changed: Dict[str, Dict[str, Any]] = {}
+        for tid in sorted(mine & theirs):
+            a, b = self.records[tid], other.records[tid]
+            delta: Dict[str, Any] = {}
+            if a.status != b.status:
+                delta["status"] = [a.status, b.status]
+            if a.iterations != b.iterations:
+                delta["iterations"] = [a.iterations, b.iterations]
+            for kind in ("restarted", "resized", "killed"):
+                ca, cb = a.count(kind), b.count(kind)
+                if ca != cb:
+                    delta[kind] = [ca, cb]
+            if metric is not None:
+                va, vb = a.best_value(metric), b.best_value(metric)
+                if va != vb:
+                    delta[f"best_{metric}"] = [va, vb]
+            if delta:
+                changed[tid] = delta
+        return {
+            "only_in_self": sorted(mine - theirs),
+            "only_in_other": sorted(theirs - mine),
+            "changed": changed,
+            "n_common": len(mine & theirs),
+        }
+
+    # -- canonical summary -------------------------------------------------------
+    def summary(self, metric: Optional[str] = None,
+                mode: str = "max") -> Dict[str, Any]:
+        """Deterministic run digest: everything here is a pure function of
+        the journal's deterministic fields (see module docstring), so two
+        identical VirtualClock runs summarize byte-identically."""
+        out: Dict[str, Any] = {
+            "schema_version": (self.header or {}).get("schema_version"),
+            "clock": (self.header or {}).get("clock"),
+            "executor": (self.header or {}).get("executor"),
+            "n_trials": len(self.records),
+            "status_counts": self.status_counts(),
+            "total_iterations": sum(r.iterations for r in self.records.values()),
+            "total_results": sum(r.n_results for r in self.records.values()),
+            "events": self._event_totals(),
+            "skipped_lines": self.n_skipped_lines,
+        }
+        if metric is not None:
+            best = self.best_trial(metric, mode)
+            out["best"] = None if best is None else {
+                "trial_id": best.trial_id,
+                "config": best.config,
+                "value": best.best_value(metric, mode),
+                "iterations": best.iterations,
+            }
+        return out
+
+    def summary_json(self, metric: Optional[str] = None,
+                     mode: str = "max") -> str:
+        return json.dumps(self.summary(metric, mode), sort_keys=True,
+                          separators=(",", ":"))
+
+    def _event_totals(self) -> Dict[str, int]:
+        totals: Dict[str, int] = {}
+        for r in self.records.values():
+            for _, _, kind, _ in r.events:
+                totals[kind] = totals.get(kind, 0) + 1
+        return dict(sorted(totals.items()))

@@ -30,7 +30,7 @@ from ..core.checkpoint import CheckpointManager
 from ..core.concurrent_executor import ConcurrentMeshExecutor
 from ..core.elastic import ResourceBroker, resolve_policy
 from ..core.executor import SerialMeshExecutor
-from ..core.loggers import Logger
+from ..core.loggers import CompositeLogger, JSONLLogger, Logger
 from ..core.object_store import ObjectStore
 from ..core.resources import Resources
 from ..core.runner import TrialRunner
@@ -107,6 +107,7 @@ def run_scenario(
     max_steps: int = 10_000_000,
     obs: Optional[Any] = None,
     token: Optional[str] = None,
+    journal_path: Optional[str] = None,
 ) -> ScenarioResult:
     """Run one scenario on a fresh ``VirtualClock`` to completion.
 
@@ -119,6 +120,11 @@ def run_scenario(
     pass a fixed token to make trial ids (hence trace ids) identical across
     runs, which is what the byte-identical-trace determinism tests and
     ``bench_faults`` rely on.
+
+    ``journal_path`` additionally tees the event stream through a
+    ``JSONLLogger`` (v2 journal with run_header), so a scenario run leaves
+    an ``ExperimentAnalysis``-readable artifact on disk.  The header's
+    ``run_id`` is pinned to ``token`` to keep same-token runs byte-identical.
     """
     import time as _wall
 
@@ -129,6 +135,12 @@ def run_scenario(
         obs.bind_clock(clock)  # span timestamps must ride the virtual axis
     pool = SlicePool(n_virtual=pool_devices)
     recorder = RecordingLogger()
+    logger: Logger = recorder
+    journal = None
+    if journal_path is not None:
+        journal = JSONLLogger(journal_path, clock=clock,
+                              run_id=f"run-{token}", executor=executor)
+        logger = CompositeLogger([recorder, journal])
     t0 = _wall.monotonic()
     with use_clock(clock):
         store = ObjectStore()
@@ -158,7 +170,7 @@ def run_scenario(
         runner = TrialRunner(
             scheduler_factory(),
             ex,
-            logger=recorder,
+            logger=logger,
             trainable_name="SimTrainable",
             stopping_criteria={"training_iteration": scenario.stop_iteration},
             max_failures=scenario.max_failures,
@@ -177,6 +189,8 @@ def run_scenario(
                 trial_id=f"{token}-{i:05d}",
             ))
         trials = runner.run(max_steps=max_steps)
+    if journal is not None:
+        journal.close()
     reset_faults(token)
     return ScenarioResult(
         scenario=scenario, trials=trials, runner=runner, executor=ex,

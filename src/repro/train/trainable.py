@@ -43,7 +43,16 @@ def _build_optimizer(hp: Dict[str, Any], total_steps: int):
 
 class ModelTrainable(Trainable):
     """config keys: model_cfg (ModelConfig), lr/warmup/optimizer/... (hypers),
-    batch/seq_len/steps_per_iter/total_steps/data_seed (workload)."""
+    batch/seq_len/steps_per_iter/total_steps/data_seed (workload).
+
+    Hardware profile (DESIGN.md §9): after every (re)build the first reported
+    result carries a one-shot ``_profile`` entry in its metrics — step-time
+    decomposition (first step = compile + execute vs steady state), device
+    memory, and with ``profile_roofline=True`` an achieved-vs-predicted
+    roofline tag from ``launch/roofline.py``.  The runner pops it off the
+    metric stream and publishes it as trial metadata (``trial.profile``) plus
+    a PROFILE event, so it rides the existing result transport across all
+    executor tiers.  Disable with ``profile=False``."""
 
     def setup(self, config: Dict[str, Any]) -> None:
         self.model_cfg: ModelConfig = config["model_cfg"]
@@ -60,29 +69,108 @@ class ModelTrainable(Trainable):
 
     def _build(self, hp: Dict[str, Any]) -> None:
         self._opt = _build_optimizer(hp, self.total_steps)
-        self._step_fn = jax.jit(make_train_step(
-            self.model_cfg, self._opt,
-            microbatch=int(hp.get("microbatch", 0))))
+        raw_step = make_train_step(self.model_cfg, self._opt,
+                                   microbatch=int(hp.get("microbatch", 0)))
         seed = int(hp.get("init_seed", 0))
         self.state = make_train_state(jax.random.key(seed), self.model_cfg, self._opt)
+        self._pending_profile = bool(hp.get("profile", True))
+        self._compiled = None
+        self._compile_s: Optional[float] = None
+        if hp.get("profile_roofline"):
+            # AOT compile: one explicit lower+compile that doubles as the
+            # step function (the jit cache never compiles a second time) and
+            # hands the roofline walk the post-fusion HLO it needs — a
+            # traced-only jit exposes StableHLO, which the cost regexes
+            # cannot parse.
+            batch = {k: jnp.asarray(v)
+                     for k, v in self._data.batch_at(self._global_step).items()}
+            p0 = time.perf_counter()
+            self._compiled = jax.jit(raw_step).lower(self.state, batch).compile()
+            self._compile_s = time.perf_counter() - p0
+            self._step_fn = self._compiled
+        else:
+            self._step_fn = jax.jit(raw_step)
 
     # -- narrow-waist contract ---------------------------------------------------
     def step(self) -> Dict[str, Any]:
         t0 = time.time()
-        loss = acc = 0.0
+        step_times = [] if self._pending_profile else None
         for _ in range(self.steps_per_iter):
             batch = {k: jnp.asarray(v)
                      for k, v in self._data.batch_at(self._global_step).items()}
-            self.state, metrics = self._step_fn(self.state, batch)
+            if step_times is None:
+                self.state, metrics = self._step_fn(self.state, batch)
+            else:
+                # Profiled iteration only: synchronous per-step timing so the
+                # first-step (compile) vs steady-state split is real, not a
+                # dispatch-queue artifact.
+                p0 = time.perf_counter()
+                self.state, metrics = self._step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                step_times.append(time.perf_counter() - p0)
             self._global_step += 1
         loss = float(metrics["loss"])
-        return {
+        out = {
             "loss": loss,
             "accuracy": float(metrics["accuracy"]),
             "grad_norm": float(metrics["grad_norm"]),
             "step": self._global_step,
             "steps_per_s": self.steps_per_iter / max(time.time() - t0, 1e-9),
         }
+        if step_times:
+            self._pending_profile = False
+            out["_profile"] = self._make_profile(step_times)
+        return out
+
+    def _make_profile(self, step_times) -> Dict[str, Any]:
+        first = step_times[0]
+        steady = min(step_times[1:]) if len(step_times) > 1 else first
+        prof: Dict[str, Any] = {
+            "first_step_s": round(first, 6),
+            "steady_step_s": round(steady, 6),
+            # AOT path: the measured explicit compile; jit path: the first
+            # step carries the compile, so the split is the estimate.
+            "compile_s": round(self._compile_s if self._compile_s is not None
+                               else max(0.0, first - steady), 6),
+            "param_count": int(param_count(self.state.params)),
+            "batch": self.batch,
+            "seq_len": self.seq_len,
+        }
+        try:
+            stats = jax.local_devices()[0].memory_stats() or {}
+            if "bytes_in_use" in stats:
+                prof["device_bytes_in_use"] = int(stats["bytes_in_use"])
+        except Exception:
+            pass  # memory_stats is backend-dependent (absent on CPU)
+        if self._compiled is not None:
+            try:
+                ma = self._compiled.memory_analysis()
+                for key, attr in (("arg_bytes", "argument_size_in_bytes"),
+                                  ("temp_bytes", "temp_size_in_bytes"),
+                                  ("output_bytes", "output_size_in_bytes")):
+                    v = getattr(ma, attr, None)
+                    if v is not None:
+                        prof[key] = int(v)
+            except Exception:
+                pass
+            try:
+                from ..launch.roofline import analyze
+                rep = analyze(
+                    arch=self.model_cfg.arch_id, shape_name="trial",
+                    mesh_name="local", chips=1, compiled=self._compiled,
+                    n_params_active=int(param_count(self.state.params)),
+                    n_tokens=self.batch * self.seq_len, kind="train")
+                prof["predicted_step_s"] = round(rep.step_time_s, 6)
+                prof["dominant"] = rep.dominant
+                prof["roofline_compute_s"] = round(rep.compute_s, 6)
+                prof["roofline_memory_s"] = round(rep.memory_s, 6)
+                prof["roofline_collective_s"] = round(rep.collective_s, 6)
+                if rep.step_time_s > 0:
+                    prof["achieved_vs_predicted"] = round(
+                        steady / rep.step_time_s, 4)
+            except Exception:
+                pass  # roofline is best-effort decoration, never a crash
+        return prof
 
     def save(self) -> Any:
         return {

@@ -1,0 +1,262 @@
+"""Journal-backed ExperimentAnalysis, LiveReporter, and the HTML run report
+(DESIGN.md §9): parsing contracts (v2 header / header-less v1 / truncated
+tails), decision-timeline reconstruction against scripted faults, and the
+byte-determinism acceptance — two identical-token VirtualClock runs must
+produce byte-identical summaries and report bodies.
+"""
+import io
+import json
+import os
+
+import pytest
+
+from repro.core import (EventType, FIFOScheduler, Result, Trial, TrialEvent,
+                        TrialStatus)
+from repro.core.loggers import JSONLLogger, LiveReporter
+from repro.obs import Observability
+from repro.obs.analysis import ExperimentAnalysis
+from repro.obs.report import build_report
+from repro.testing import crash_storm, run_scenario
+
+
+def _v2_lines():
+    """A hand-built v2 journal: header, two trials, faults, a profile."""
+    return [
+        json.dumps({"event": "run_header", "schema_version": 2,
+                    "run_id": "run-x", "clock": "VirtualClock",
+                    "executor": "concurrent", "t": 0.0}),
+        json.dumps({"event": "result", "trial_id": "a", "iteration": 1,
+                    "config": {"lr": 0.1}, "metrics": {"loss": 1.0}, "t": 1.0}),
+        json.dumps({"event": "restarted", "trial_id": "a", "seq": 7,
+                    "info": {"num_failures": 1}, "t": 1.5}),
+        json.dumps({"event": "result", "trial_id": "a", "iteration": 2,
+                    "config": {"lr": 0.1}, "metrics": {"loss": 0.5}, "t": 2.0}),
+        json.dumps({"event": "profile", "trial_id": "a", "seq": 8,
+                    "info": {"steady_step_s": 0.01, "dominant": "compute"},
+                    "t": 2.0}),
+        json.dumps({"event": "result", "trial_id": "b", "iteration": 1,
+                    "config": {"lr": 0.2}, "metrics": {"loss": 0.8}, "t": 1.0}),
+        json.dumps({"event": "complete", "trial_id": "a",
+                    "status": "TERMINATED", "iterations": 2, "t": 2.1}),
+        json.dumps({"event": "complete", "trial_id": "b",
+                    "status": "ERROR", "iterations": 1, "t": 1.2}),
+    ]
+
+
+class TestJournalParsing:
+    def test_v2_journal_with_header(self):
+        an = ExperimentAnalysis.from_lines(_v2_lines())
+        assert an.header["schema_version"] == 2
+        assert an.header["clock"] == "VirtualClock"
+        assert len(an) == 2
+        a = an.get("a")
+        assert a.status == "TERMINATED" and a.iterations == 2
+        assert a.config == {"lr": 0.1}
+        assert a.series["loss"] == [(1.0, 1, 1.0), (2.0, 2, 0.5)]
+        assert a.count("restarted") == 1
+        assert a.profile["dominant"] == "compute"
+        assert an.status_counts() == {"ERROR": 1, "TERMINATED": 1}
+
+    def test_headerless_v1_journal(self):
+        an = ExperimentAnalysis.from_lines(_v2_lines()[1:])
+        assert an.header is None
+        assert len(an) == 2
+        assert an.best_trial("loss", "min").trial_id == "a"
+        # summary still serializes (header fields null, not a crash)
+        s = an.summary(metric="loss", mode="min")
+        assert s["schema_version"] is None and s["n_trials"] == 2
+
+    def test_truncated_tail_never_raises(self):
+        lines = _v2_lines()
+        # a crashed producer: last line cut mid-record + binary junk
+        lines[-1] = lines[-1][: len(lines[-1]) // 2]
+        lines.append("\x00\x01 not json at all")
+        an = ExperimentAnalysis.from_lines(lines)
+        assert an.n_skipped_lines == 2
+        assert an.get("a").status == "TERMINATED"
+        assert an.get("b").status is None  # its complete record was the cut one
+        assert "(in flight)" in an.status_counts()
+
+    def test_unknown_records_and_keys_tolerated(self):
+        lines = _v2_lines() + [
+            json.dumps({"event": "future_thing", "trial_id": "a",
+                        "info": {"x": 1}, "extra_key": True, "t": 9.0}),
+            json.dumps({"event": "no_trial_id_record", "payload": 1}),
+        ]
+        an = ExperimentAnalysis.from_lines(lines)
+        assert an.get("a").count("future_thing") == 1
+
+    def test_best_trial_and_dataframe(self):
+        an = ExperimentAnalysis.from_lines(_v2_lines())
+        assert an.best_trial("loss", "min").trial_id == "a"
+        assert an.best_trial("loss", "max").trial_id == "a"  # 1.0 beats 0.8
+        df = an.dataframe(metric="loss")
+        assert df["trial_id"] == ["a", "b"]
+        assert df["restarts"] == [1, 0]
+        assert df["last_loss"] == [0.5, 0.8]
+
+    def test_diff_same_token_alignment(self):
+        a = ExperimentAnalysis.from_lines(_v2_lines())
+        lines = _v2_lines()
+        # flip trial b's terminal status
+        lines[-1] = json.dumps({"event": "complete", "trial_id": "b",
+                                "status": "TERMINATED", "iterations": 1,
+                                "t": 1.2})
+        b = ExperimentAnalysis.from_lines(lines)
+        d = a.diff(b, metric="loss")
+        assert d["n_common"] == 2
+        assert d["only_in_self"] == [] and d["only_in_other"] == []
+        assert d["changed"] == {"b": {"status": ["ERROR", "TERMINATED"]}}
+        # self-diff is empty
+        assert a.diff(a, metric="loss")["changed"] == {}
+
+
+class TestScenarioJournal:
+    """run_scenario(journal_path=...) leaves an analysis-readable artifact."""
+
+    def _run(self, tmp_path, token, n_trials=40):
+        jp = str(tmp_path / f"{token}.jsonl")
+        res = run_scenario(
+            crash_storm(n_trials=n_trials, seed=7),
+            lambda: FIFOScheduler(metric="loss", mode="min"),
+            executor="concurrent", pool_devices=8,
+            token=token, journal_path=jp)
+        return res, jp
+
+    def test_decision_timeline_matches_scripted_faults(self, tmp_path):
+        res, jp = self._run(tmp_path, "an-tl")
+        an = ExperimentAnalysis.from_journal(jp)
+        assert len(an) == len(res.trials)
+        # journal-reconstructed restart counts == live Trial bookkeeping
+        for t in res.trials:
+            r = an.get(t.trial_id)
+            assert r is not None
+            assert r.count("restarted") == t.num_failures - (
+                1 if t.status == TrialStatus.ERROR else 0), t.trial_id
+            assert r.status == t.status.value
+            tl = an.decision_timeline(t.trial_id)
+            assert all(e["kind"] == "restarted" for e in tl)
+            # timeline is time-ordered
+            assert [e["t"] for e in tl] == sorted(e["t"] for e in tl)
+        # the storm scripted crashes -> some trial actually restarted
+        assert any(an.get(t.trial_id).count("restarted") for t in res.trials)
+        # errored trials got terminal complete records too
+        errored = [t for t in res.trials if t.status == TrialStatus.ERROR]
+        assert errored and all(an.get(t.trial_id).status == "ERROR"
+                               for t in errored)
+
+    def test_same_token_runs_byte_identical(self, tmp_path):
+        """Acceptance: identical-token VirtualClock runs -> byte-identical
+        analysis summaries AND byte-identical HTML report bodies."""
+        _, jp1 = self._run(tmp_path, "an-det")
+        an1 = ExperimentAnalysis.from_journal(jp1)
+        jp2 = str(tmp_path / "second.jsonl")
+        run_scenario(crash_storm(n_trials=40, seed=7),
+                     lambda: FIFOScheduler(metric="loss", mode="min"),
+                     executor="concurrent", pool_devices=8,
+                     token="an-det", journal_path=jp2)
+        an2 = ExperimentAnalysis.from_journal(jp2)
+        s1 = an1.summary_json(metric="loss", mode="min")
+        s2 = an2.summary_json(metric="loss", mode="min")
+        assert s1 == s2
+        h1 = build_report(analysis=an1, metric="loss", mode="min")
+        h2 = build_report(analysis=an2, metric="loss", mode="min")
+        assert h1 == h2
+        # and the diff agrees: nothing changed between the runs
+        d = an1.diff(an2, metric="loss")
+        assert d["changed"] == {} and not d["only_in_self"]
+
+
+class TestReport:
+    def test_report_renders_all_sections(self, tmp_path):
+        jp = str(tmp_path / "events.jsonl")
+        tp = str(tmp_path / "trace.json")
+        mp = str(tmp_path / "metrics.jsonl")
+        obs = Observability(trace=tp, metrics=mp, metrics_interval=60.0)
+        res = run_scenario(crash_storm(n_trials=30, seed=1),
+                           lambda: FIFOScheduler(metric="loss", mode="min"),
+                           executor="concurrent", pool_devices=8,
+                           obs=obs, token="an-report", journal_path=jp)
+        obs.close(res.executor)
+        html = build_report(journal_path=jp, trace_path=tp, metrics_path=mp,
+                            metric="loss", mode="min")
+        assert html.startswith("<!DOCTYPE html>")
+        assert html.endswith("</body></html>\n")
+        for needle in ("loss per trial", "Trial lifecycle", "Best config",
+                       "scheduler decisions", "Control-plane metrics",
+                       "<svg", "TERMINATED"):
+            assert needle in html, needle
+        # self-contained: no external fetches, no scripts
+        assert "<script" not in html and "http://" not in html
+        assert html.count("<svg") == html.count("</svg>")
+
+    def test_report_cli_discovers_log_dir(self, tmp_path, capsys):
+        from repro.launch.report import main
+        jp = str(tmp_path / "events.jsonl")
+        lg = JSONLLogger(jp)
+        t = Trial({"lr": 0.1})
+        for i in range(3):
+            lg.on_result(t, Result(t.trial_id, i + 1, {"loss": 1.0 / (i + 1)}))
+        t.set_status(TrialStatus.TERMINATED)
+        lg.on_trial_complete(t)
+        lg.close()
+        assert main([str(tmp_path), "--mode", "min"]) == 0
+        out = tmp_path / "report.html"
+        assert out.exists() and "<svg" in out.read_text()
+
+    def test_report_cli_requires_journal(self, tmp_path):
+        from repro.launch.report import main
+        with pytest.raises(SystemExit):
+            main([str(tmp_path)])  # empty dir: no journal to be found
+
+
+class TestLiveReporter:
+    def _feed(self, rep, trial_id="t1", iters=3):
+        t = Trial({"lr": 0.1}, trial_id=trial_id)
+        for i in range(1, iters + 1):
+            r = Result(t.trial_id, i, {"loss": 1.0 / i})
+            t.record_result(r)
+            rep.on_result(t, r)
+        return t
+
+    def test_renders_trial_table(self):
+        buf = io.StringIO()
+        rep = LiveReporter(metric="loss", stream=buf, interval_s=0.0)
+        t = self._feed(rep)
+        t.set_status(TrialStatus.TERMINATED)
+        rep.on_trial_complete(t)
+        rep.on_experiment_end([t])
+        out = buf.getvalue()
+        assert "t1" in out and "TERMINATED" in out
+        assert "loss" in out and "0.333" in out
+        assert "trials: 1" in out
+
+    def test_throttle_caps_renders(self):
+        from repro.core.clock import VirtualClock
+        clock = VirtualClock()
+        buf = io.StringIO()
+        rep = LiveReporter(metric="loss", stream=buf, interval_s=5.0,
+                           clock=clock)
+        t = Trial({"lr": 0.1}, trial_id="t2")
+        for i in range(1, 50):
+            rep.on_result(t, Result(t.trial_id, i, {"loss": 1.0}))
+        # clock never advanced past the interval: exactly the initial render
+        assert buf.getvalue().count("trials: 1") == 1
+
+    def test_fault_columns(self):
+        buf = io.StringIO()
+        rep = LiveReporter(metric="loss", stream=buf, interval_s=0.0)
+        t = self._feed(rep, "t3")
+        rep.on_event(t, TrialEvent(EventType.RESTARTED, t.trial_id,
+                                   info={"num_failures": 1}))
+        rep.on_experiment_end([t])
+        assert "t3" in buf.getvalue()
+
+    def test_max_rows_elision(self):
+        buf = io.StringIO()
+        rep = LiveReporter(metric="loss", stream=buf, interval_s=0.0,
+                           max_rows=5)
+        for i in range(9):
+            self._feed(rep, f"trial-{i:02d}", iters=1)
+        rep.on_experiment_end([])
+        assert "more trial(s) not shown" in buf.getvalue()

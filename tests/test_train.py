@@ -152,3 +152,45 @@ class TestDataPipeline:
         with pytest.raises(ValueError):
             SyntheticLMDataset(DataConfig(global_batch=5, seq_len=8,
                                           vocab_size=10, num_shards=2))
+
+
+class TestHardwareProfile:
+    """The one-shot ``_profile`` contract (DESIGN.md §9)."""
+
+    CFG = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=64).validate()
+
+    def _trainable(self, **hp):
+        from repro.train.trainable import make_model_trainable
+        cls = make_model_trainable(self.CFG, batch=4, seq_len=32,
+                                   steps_per_iter=3, total_steps=10)
+        return cls({"lr": 1e-3, **hp})
+
+    def test_first_step_carries_profile_once(self):
+        tr = self._trainable()
+        out = tr.step()
+        p = out["_profile"]
+        assert p["first_step_s"] >= p["steady_step_s"] > 0
+        assert p["compile_s"] >= 0
+        assert p["param_count"] > 0
+        assert p["batch"] == 4 and p["seq_len"] == 32
+        # one-shot: the next iteration is clean
+        assert "_profile" not in tr.step()
+
+    def test_profile_false_disables(self):
+        tr = self._trainable(profile=False)
+        assert "_profile" not in tr.step()
+
+    def test_rebuild_rearms_profile(self):
+        tr = self._trainable()
+        tr.step()
+        assert tr.reset_config({"lr": 5e-4})  # PBT mutation path
+        assert "_profile" in tr.step()
+
+    def test_roofline_tag(self):
+        tr = self._trainable(profile_roofline=True)
+        p = tr.step()["_profile"]
+        assert p["predicted_step_s"] > 0
+        assert p["dominant"] in ("compute", "memory", "collective")
+        assert p["achieved_vs_predicted"] > 0
+        assert p["arg_bytes"] > 0 and p["temp_bytes"] > 0
