@@ -42,7 +42,7 @@ class NoopTrainable(Trainable):
 
 
 def _event_loop_us(n_trials: int, obs: Optional[Observability] = None,
-                   reps: int = 3, logger=None) -> float:
+                   reps: int = 3, logger=None, runner_kw=None) -> float:
     """Best-of-``reps`` microseconds per result through the serial event loop
     (best-of filters host scheduling noise out of a ~10ms-granularity wall)."""
     best = float("inf")
@@ -52,6 +52,7 @@ def _event_loop_us(n_trials: int, obs: Optional[Observability] = None,
                                       total_devices=n_trials, checkpoint_freq=0,
                                       obs=obs)
         kw = {} if logger is None else {"logger": logger()}
+        kw.update(runner_kw or {})
         runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
                              stopping_criteria={"training_iteration": 50},
                              obs=obs, **kw)
@@ -101,6 +102,24 @@ def run() -> List[Dict]:
                  "us_per_result": round(us_live, 2)})
     emit("overhead/event_loop_live_reporter_n64", us_live,
          f"{live_ratio:.2f}x disabled ({us_off:.1f}us)")
+
+    # Decision provenance on vs off (DESIGN.md §10).  The `event_loop` rows
+    # above already run with journaling ON (the default); the off row drops
+    # the drain+emit entirely, so the pair bounds the provenance cost.  Gated
+    # like the LiveReporter row: the ratio is recorded for drift tracking
+    # (acceptance: decisions-on stays within ~1.1x of decisions-off — one
+    # deque drain per on_result plus one journal write per non-CONTINUE).
+    us_dec_off = _event_loop_us(64, runner_kw={"decisions": False})
+    us_dec_on = _event_loop_us(64, runner_kw={"decisions": True})
+    dec_ratio = us_dec_on / max(us_dec_off, 1e-9)
+    rows.append({"bench": "event_loop_decisions_off", "n_trials": 64,
+                 "results_per_s": round(1e6 / us_dec_off, 1),
+                 "us_per_result": round(us_dec_off, 2)})
+    rows.append({"bench": "event_loop_decisions_on", "n_trials": 64,
+                 "results_per_s": round(1e6 / us_dec_on, 1),
+                 "us_per_result": round(us_dec_on, 2)})
+    emit("overhead/event_loop_decisions_on_n64", us_dec_on,
+         f"{dec_ratio:.2f}x decisions-off ({us_dec_off:.1f}us)")
 
     # checkpoint codec on a ~10M-float pytree
     tree = {"params": {f"layer{i}": np.random.default_rng(i).standard_normal(

@@ -45,6 +45,7 @@ class EventType(str, enum.Enum):
     CREDITS = "CREDITS"                    # lookahead credit grant changed for a trial
     SPAN = "SPAN"                          # batch of trace spans from a worker (repro.obs)
     PROFILE = "PROFILE"                    # per-trial hardware profile (repro.obs, §9)
+    DECISION = "DECISION"                  # scheduler/searcher verdict + inputs (DESIGN.md §10)
 
 
 @dataclass

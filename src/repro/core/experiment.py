@@ -177,6 +177,8 @@ def run_experiments(
     obs: Optional[Any] = None,              # pre-built repro.obs.Observability
     report: Union[None, bool, str] = None,  # HTML run report (needs log_dir)
     live_table: bool = False,               # LiveReporter trial table
+    decisions: Union[bool, str] = True,     # DECISION journaling (§10)
+    flight_recorder: Union[None, bool, str, Any] = None,  # crash forensics (§10)
 ) -> ExperimentAnalysis:
     """Run one experiment to completion; returns an ExperimentAnalysis.
 
@@ -223,7 +225,19 @@ def run_experiments(
     or to an explicit path when ``report`` is a string — after the run ends,
     even when it ends by abort (DESIGN.md §9).  ``live_table=True`` attaches
     a ``LiveReporter`` rendering the live trial status table, throttled on
-    the injected clock."""
+    the injected clock.
+
+    Decision provenance (DESIGN.md §10): ``decisions=True`` (default)
+    journals every scheduler/searcher/runner verdict as a typed DECISION
+    record with its inputs; ``"full"`` includes CONTINUE verdicts; ``False``
+    disables.  ``flight_recorder`` arms the crash-forensics ring buffer:
+    with a ``log_dir`` it defaults on (dumping to ``log_dir/flightrec``);
+    pass True (dump dir from ``$REPRO_FLIGHTREC_DIR``, default
+    ``flightrec``), a directory path, or a pre-built ``FlightRecorder``.  On
+    SIGTERM, a controller exception, or a max_experiment_failures abort it
+    dumps a self-contained forensic bundle; scheduler+searcher state is also
+    checkpointed to ``log_dir/search_state.json`` on the metrics-snapshot
+    throttle."""
     from .clock import get_default_clock
     clock = clock or get_default_clock()
     scheduler = scheduler or FIFOScheduler()
@@ -306,8 +320,32 @@ def run_experiments(
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
         loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl"),
-                                   clock=clock, executor=exec_kind))
+                                   clock=clock, executor=exec_kind,
+                                   decisions=decisions is not False))
     logger = CompositeLogger(loggers)
+
+    # -- crash forensics + searcher-state checkpoints (DESIGN.md §10) -------------
+    from ..obs.flightrec import FlightRecorder, SearchStateSnapshotter
+    if flight_recorder is None and log_dir:
+        flight_recorder = os.path.join(log_dir, "flightrec")
+    if flight_recorder is True:
+        flight_recorder = os.environ.get("REPRO_FLIGHTREC_DIR", "flightrec")
+    if isinstance(flight_recorder, str):
+        flightrec: Optional[FlightRecorder] = FlightRecorder(
+            clock=clock, out_dir=flight_recorder)
+    else:
+        flightrec = flight_recorder or None
+    if flightrec is not None:
+        flightrec.bind_clock(clock)
+        for lg in loggers:
+            if isinstance(lg, JSONLLogger):
+                flightrec.run_id = lg.run_id  # one id across journal + dumps
+                break
+    snapshotter = None
+    if log_dir:
+        snapshotter = SearchStateSnapshotter(
+            os.path.join(log_dir, "search_state.json"), clock=clock,
+            interval_s=metrics_interval if metrics_interval > 0 else 10.0)
 
     broker = None
     if (elastic not in (None, "off")) or lookahead != 1:
@@ -327,6 +365,9 @@ def run_experiments(
         max_experiment_failures=max_experiment_failures,
         broker=broker,
         obs=obs,
+        decisions=decisions,
+        flight_recorder=flightrec,
+        state_snapshotter=snapshotter,
     )
     if log_dir:
         import weakref
@@ -361,13 +402,24 @@ def run_experiments(
     # journal's final records, and the HTML report must survive the abort —
     # an aborted run is exactly the one worth inspecting.
     completed = False
+    sigterm_armed = (flightrec.install_signal_handler(runner, executor)
+                     if flightrec is not None else False)
     try:
         runner.run(max_steps=max_steps)
         completed = True
     finally:
+        if sigterm_armed:
+            flightrec.remove_signal_handler()
         if not completed:
             # runner.run does both of these on its clean path; an exception
             # skipped them.  Neither may mask the original exception.
+            if flightrec is not None:
+                # The abort is exactly what the flight recorder exists for:
+                # dump the forensic bundle before anything is torn down.
+                try:
+                    flightrec.dump(runner, executor, reason="abort")
+                except Exception:
+                    pass
             try:
                 executor.shutdown()
             except Exception:
@@ -376,6 +428,12 @@ def run_experiments(
                 logger.on_experiment_end(runner.trials)
             except Exception:
                 pass
+        if snapshotter is not None:
+            try:
+                snapshotter.snapshot(scheduler, searcher)  # final state
+            except Exception:
+                if completed:
+                    raise
         obs.close(executor)  # final metrics snapshot + Chrome trace export
         logger.close()
         if report and log_dir:

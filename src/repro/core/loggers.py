@@ -322,13 +322,15 @@ class JSONLLogger(Logger):
     interpret the stream without the producing process.  Readers must stay
     unknown-field (and unknown-record) tolerant: filter on ``event`` and
     ignore keys you don't know — that is what keeps pre-header readers of the
-    v1 stream working against v2 files.
+    v1 stream working against v2 files, and v2 readers working against v3
+    (which adds ``decision`` records and the ``decisions`` capability flag).
     """
 
-    SCHEMA_VERSION = 2
+    SCHEMA_VERSION = 3
 
     def __init__(self, path: str, clock: Optional[Clock] = None,
-                 run_id: Optional[str] = None, executor: Optional[str] = None):
+                 run_id: Optional[str] = None, executor: Optional[str] = None,
+                 decisions: bool = True):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.clock = clock or get_default_clock()
         t0 = self.clock.time()
@@ -340,6 +342,7 @@ class JSONLLogger(Logger):
             "run_id": self.run_id,
             "clock": type(self.clock).__name__,
             "executor": executor,
+            "decisions": bool(decisions),
             "t": t0,
         }) + "\n")
         self.f.flush()

@@ -16,9 +16,10 @@ from __future__ import annotations
 
 import itertools
 from time import perf_counter as _perf
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 from ..obs import NULL_OBS
+from ..obs.flightrec import json_safe as _json_safe
 from .events import EventType, TrialEvent
 from .executor import TrialExecutor
 from .loggers import Logger
@@ -45,10 +46,17 @@ class TrialRunner:
         max_experiment_failures: int = 0,    # 0 = unlimited errored trials
         broker: Optional[Any] = None,        # elastic.ResourceBroker (DESIGN.md §6)
         obs: Optional[Any] = None,           # repro.obs.Observability (§8)
+        decisions: Union[bool, str] = True,  # DECISION journaling (§10): True |
+                                             # "full" (incl. CONTINUE) | False
+        flight_recorder: Optional[Any] = None,    # repro.obs.FlightRecorder (§10)
+        state_snapshotter: Optional[Any] = None,  # SearchStateSnapshotter (§10)
     ):
         self.scheduler = scheduler
         self.executor = executor
         self.obs = obs or NULL_OBS
+        self.decisions = decisions
+        self.flightrec = flight_recorder
+        self.state_snapshotter = state_snapshotter
         # Pre-resolved hot-path instruments (one None test per use when off).
         m = self.obs.metrics
         if m is not None:
@@ -163,6 +171,40 @@ class TrialRunner:
         self.logger.on_trial_complete(trial)
         self._observe(trial, final=True)
 
+    # -- decision provenance (DESIGN.md §10) -------------------------------------
+    def _emit_decision(self, trial_id: str, source: str, by: str,
+                       record: Dict[str, Any]) -> None:
+        """Journal one decision record as a DECISION TrialEvent."""
+        info = {"source": source, "by": by,
+                "verdict": record.get("verdict"),
+                "iteration": record.get("iteration"),
+                "inputs": _json_safe(record.get("inputs") or {})}
+        clock = getattr(self.executor, "clock", None)
+        event = TrialEvent(
+            EventType.DECISION, trial_id, info=info,
+            timestamp=clock.time() if clock is not None else None)
+        trial = self.get_trial(trial_id)
+        if trial is not None:
+            self.logger.on_event(trial, event)
+        if self.flightrec is not None:
+            self.flightrec.record_decision(event)
+
+    def _drain_scheduler_decisions(self) -> None:
+        """Journal verdicts the scheduler recorded during its last call.
+
+        Drained after every on_result/on_trial_error so peer verdicts (e.g.
+        a HyperBand cut stopping PAUSED peers directly) land in the journal
+        even though they never surface as a returned decision.
+        """
+        records = self.scheduler.pop_decisions()
+        if not records or self.decisions is False:
+            return
+        by = type(self.scheduler).__name__
+        for rec in records:
+            if self.decisions != "full" and rec.get("verdict") == "CONTINUE":
+                continue
+            self._emit_decision(rec["trial_id"], "scheduler", by, rec)
+
     # -- searcher integration ----------------------------------------------------
     def _maybe_suggest(self) -> Optional[Trial]:
         if self._searcher_exhausted:
@@ -183,6 +225,16 @@ class TrialRunner:
         if config is None:
             self._searcher_exhausted = True
             return None
+        if self.decisions is not False:
+            rec = self.searcher.explain_last()
+            if rec is not None and rec.get("trial_id") == trial_id:
+                # Emitted after add_trial below so the logger can resolve the
+                # trial; buffer the record until then.
+                pending_suggest = rec
+            else:
+                pending_suggest = None
+        else:
+            pending_suggest = None
         trial = Trial(
             config=config,
             trainable_name=self.trainable_name,
@@ -191,6 +243,9 @@ class TrialRunner:
             trial_id=trial_id,
         )
         self.add_trial(trial)
+        if pending_suggest is not None:
+            self._emit_decision(trial_id, "searcher",
+                                type(self.searcher).__name__, pending_suggest)
         return trial
 
     def _observe(self, trial: Trial, final: bool) -> None:
@@ -278,6 +333,10 @@ class TrialRunner:
         self._stall_count = 0
         self.obs.on_event(event)          # count + adopt shipped SPAN batches
         self.obs.maybe_snapshot(self.executor)
+        if self.flightrec is not None:
+            self.flightrec.record_event(event)
+        if self.state_snapshotter is not None:
+            self.state_snapshotter.maybe_snapshot(self.scheduler, self.searcher)
         if event.type == EventType.SPAN:
             # Spans live in the trace export, not the event log — fully
             # consumed by obs.on_event above.
@@ -319,6 +378,11 @@ class TrialRunner:
         self.logger.on_result(trial, result)
 
         if result.done or trial.should_stop(result):
+            if self.decisions is not False:
+                self._emit_decision(trial.trial_id, "runner", "TrialRunner", {
+                    "verdict": "STOP",
+                    "iteration": result.training_iteration,
+                    "inputs": self._stop_reason(trial, result)})
             self.stop_trial(trial)
             return not self.is_finished()
 
@@ -328,9 +392,24 @@ class TrialRunner:
             p0 = _perf()
             decision = self.scheduler.on_result(self, trial, result)
             self._m_decide.observe((_perf() - p0) * 1e6)
+        self._drain_scheduler_decisions()
         self._observe(trial, final=False)
         self._apply(trial, decision)
         return not self.is_finished()
+
+    def _stop_reason(self, trial: Trial, result: Result) -> Dict[str, Any]:
+        """Why the runner (not the scheduler) is stopping this trial."""
+        if result.done:
+            return {"reason": "result_done"}
+        for metric, bound in trial.stopping_criteria.items():
+            if metric == "training_iteration":
+                if result.training_iteration >= bound:
+                    return {"reason": "stopping_criterion", "criterion": metric,
+                            "bound": bound, "value": result.training_iteration}
+            elif metric in result.metrics and result.value(metric) >= bound:
+                return {"reason": "stopping_criterion", "criterion": metric,
+                        "bound": bound, "value": result.value(metric)}
+        return {"reason": "unknown"}
 
     # -- failure handling --------------------------------------------------------
     def _handle_trial_error(self, trial: Trial, error: str) -> bool:
@@ -379,6 +458,9 @@ class TrialRunner:
     def _finalize_error(self, trial: Trial) -> None:
         self.n_errors += 1
         self.scheduler.on_trial_error(self, trial)
+        # An error can trigger peer verdicts (HyperBand re-checks its cut when
+        # the awaited peer died) — journal them like any result-path decision.
+        self._drain_scheduler_decisions()
         # Errored trials get a final journal record too — without it the
         # JSONL stream has no terminal marker for them and post-hoc analysis
         # would report them as still in flight.

@@ -8,7 +8,7 @@ setting".  Multiple brackets (s values) are supported like the published ASHA.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -31,8 +31,15 @@ class _Bracket:
         # rung -> list of recorded scores (higher better)
         self.rungs: Dict[int, List[float]] = {m: [] for m in self.milestones}
 
-    def on_result(self, iteration: int, score: float) -> SchedulerDecision:
+    def on_result(self, iteration: int, score: float
+                  ) -> Tuple[SchedulerDecision, Optional[Dict[str, Any]]]:
+        """Verdict plus the rung check that produced it (None = no new rung).
+
+        The returned check carries the promotion inputs for the *deciding*
+        rung: the last rung this result arrived at (a STOP at any rung wins).
+        """
         decision = SchedulerDecision.CONTINUE
+        check: Optional[Dict[str, Any]] = None
         for milestone in self.milestones:
             if iteration >= milestone and milestone != self.milestones[-1]:
                 recorded = self.rungs[milestone]
@@ -43,10 +50,24 @@ class _Bracket:
                         if recorded
                         else float("-inf")
                     )
+                    rung_decision = (SchedulerDecision.STOP if score < cutoff
+                                     else SchedulerDecision.CONTINUE)
+                    if check is None or rung_decision == SchedulerDecision.STOP:
+                        check = {"milestone": milestone, "cutoff": cutoff,
+                                 "score": score, "n_rung": len(recorded),
+                                 "rf": self.rf}
                     recorded.append(score)
                     if score < cutoff:
                         decision = SchedulerDecision.STOP
-        return decision
+        return decision, check
+
+    def state_dict(self) -> Dict[str, Any]:
+        # rungs keyed by int milestones -> list-of-pairs for JSON round-trips
+        return {"rungs": [[m, list(v)] for m, v in self.rungs.items()]}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        for m, scores in state["rungs"]:
+            self.rungs[int(m)] = [float(s) for s in scores]
 
     def debug_string(self) -> str:
         return " | ".join(f"r={m}:n={len(v)}" for m, v in self.rungs.items())
@@ -87,13 +108,38 @@ class AsyncHyperBandScheduler(TrialScheduler):
 
     def on_result(self, runner, trial: Trial, result: Result) -> SchedulerDecision:
         if result.training_iteration >= self.max_t:
+            self._record_decision(trial.trial_id, SchedulerDecision.STOP,
+                                  iteration=result.training_iteration,
+                                  reason="max_t", max_t=self.max_t)
             return SchedulerDecision.STOP
-        bracket = self._brackets[self._trial_bracket.get(trial.trial_id, 0)]
+        b_idx = self._trial_bracket.get(trial.trial_id, 0)
+        bracket = self._brackets[b_idx]
         score = self._score(result.value(self.metric))
-        decision = bracket.on_result(result.training_iteration, score)
+        decision, check = bracket.on_result(result.training_iteration, score)
+        if check is not None:
+            self._record_decision(trial.trial_id, decision,
+                                  iteration=result.training_iteration,
+                                  reason="rung", bracket=b_idx, **check)
         if decision == SchedulerDecision.STOP:
             self.n_stopped += 1
         return decision
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "brackets": [b.state_dict() for b in self._brackets],
+            "trial_bracket": dict(self._trial_bracket),
+            "rng": self._rng.bit_generator.state,
+            "n_stopped": self.n_stopped,
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        for b, bs in zip(self._brackets, state["brackets"]):
+            b.load_state_dict(bs)
+        self._trial_bracket = {str(k): int(v)
+                               for k, v in state["trial_bracket"].items()}
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = state["rng"]
+        self.n_stopped = int(state["n_stopped"])
 
     def debug_string(self) -> str:
         lines = [f"AsyncHyperBand: {self.n_stopped} stopped"]

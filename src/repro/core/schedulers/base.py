@@ -13,7 +13,8 @@ CONTINUE, PAUSE (checkpoint + yield resources), STOP, or RESTART_WITH_CONFIG
 from __future__ import annotations
 
 import enum
-from typing import List, Optional, TYPE_CHECKING
+from collections import deque
+from typing import Any, Dict, List, Optional, TYPE_CHECKING
 
 from ..trial import Result, Trial, TrialStatus
 
@@ -38,10 +39,61 @@ class TrialScheduler:
             raise ValueError("mode must be 'min' or 'max'")
         self.metric = metric
         self.mode = mode
+        # Decision provenance (DESIGN.md §10): every non-trivial verdict is
+        # recorded with the inputs that produced it.  The runner drains this
+        # after each on_result/on_trial_error call; the maxlen is a backstop
+        # so an undrained scheduler (unit tests, direct use) stays bounded.
+        self._decision_log: "deque[Dict[str, Any]]" = deque(maxlen=4096)
+        self._last_explain: Optional[Dict[str, Any]] = None
 
     # score such that HIGHER is always better internally
     def _score(self, value: float) -> float:
         return value if self.mode == "max" else -value
+
+    # -- decision provenance (DESIGN.md §10) ------------------------------------
+    def _record_decision(self, trial_id: str, verdict: "SchedulerDecision",
+                         iteration: Optional[int] = None,
+                         **inputs: Any) -> Dict[str, Any]:
+        """Record a verdict plus the inputs that produced it.
+
+        Called by subclasses at each decision point; the record lands in
+        ``explain_last()`` and in the drain queue the runner journals from.
+        """
+        rec: Dict[str, Any] = {
+            "trial_id": trial_id,
+            "verdict": verdict.value if isinstance(verdict, SchedulerDecision) else str(verdict),
+            "iteration": iteration,
+            "inputs": inputs,
+        }
+        self._last_explain = rec
+        self._decision_log.append(rec)
+        return rec
+
+    def explain_last(self) -> Optional[Dict[str, Any]]:
+        """The most recent decision record (verdict + inputs), or None."""
+        return self._last_explain
+
+    def pop_decisions(self) -> List[Dict[str, Any]]:
+        """Drain all recorded-but-unjournaled decision records, in order."""
+        if not self._decision_log:
+            return []
+        out = list(self._decision_log)
+        self._decision_log.clear()
+        return out
+
+    # -- durable state (DESIGN.md §10) ------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot of decision-relevant mutable state.
+
+        The base scheduler (and FIFO) is stateless beyond construction args,
+        so the base snapshot is empty; subclasses extend it.  ``metric`` /
+        ``mode`` are constructor config, not state — resume reconstructs the
+        scheduler then loads this dict.
+        """
+        return {}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        """Restore from a ``state_dict()`` snapshot.  Base: nothing to do."""
 
     def decision_interval(self) -> int:
         """Decision granularity: how many results may elapse between decisions

@@ -12,7 +12,7 @@ trial as an atomic unit (Spearmint/HyperOpt/TuPAQ) cannot express (§2).
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -68,6 +68,23 @@ class _SyncBracket:
             pass  # final round: survivors run to R then terminate via max_t
         return keep
 
+    def state_dict(self) -> Dict[str, Any]:
+        # Trials are serialized by id: load_state_dict takes an id->Trial
+        # resolver because live Trial objects don't survive a JSON round-trip.
+        return {"eta": self.eta, "capacity": self.capacity, "r0": self.r0,
+                "R": self.R, "round": self.round,
+                "trial_ids": [t.trial_id for t in self.trials],
+                "arrived": dict(self.arrived), "finished": self.finished}
+
+    def load_state_dict(self, state: Dict[str, Any],
+                        trials: Optional[Dict[str, Trial]] = None) -> None:
+        self.round = int(state["round"])
+        self.arrived = {str(k): float(v) for k, v in state["arrived"].items()}
+        self.finished = bool(state["finished"])
+        if trials is not None:
+            self.trials = [trials[tid] for tid in state["trial_ids"]
+                           if tid in trials]
+
 
 class HyperBandScheduler(TrialScheduler):
     def __init__(
@@ -105,8 +122,30 @@ class HyperBandScheduler(TrialScheduler):
         self._trial_bracket[trial.trial_id] = bracket
 
     # -- result handling ----------------------------------------------------------
+    def _cut_records(self, bracket: _SyncBracket, keep: Dict[str, bool],
+                     arrived: Dict[str, float], milestone: int,
+                     rnd: int) -> Dict[str, Dict[str, Any]]:
+        """Per-trial provenance for one halving round (DESIGN.md §10).
+
+        Returns trial_id -> inputs dict: rank within the round's ranking,
+        score, and the score of the last kept trial (the effective cut line).
+        """
+        ranked = sorted(keep, key=lambda tid: arrived.get(tid, float("-inf")),
+                        reverse=True)
+        n_keep = sum(1 for v in keep.values() if v)
+        cut_score = (arrived.get(ranked[n_keep - 1], float("-inf"))
+                     if n_keep else float("-inf"))
+        b_idx = self._brackets.index(bracket)
+        return {tid: {"milestone": milestone, "round": rnd, "bracket": b_idx,
+                      "rank": i, "n_keep": n_keep, "n_live": len(ranked),
+                      "score": arrived.get(tid), "cut_score": cut_score}
+                for i, tid in enumerate(ranked)}
+
     def on_result(self, runner, trial: Trial, result: Result) -> SchedulerDecision:
         if result.training_iteration >= self.max_t:
+            self._record_decision(trial.trial_id, SchedulerDecision.STOP,
+                                  iteration=result.training_iteration,
+                                  reason="max_t", max_t=self.max_t)
             return SchedulerDecision.STOP
         bracket = self._trial_bracket[trial.trial_id]
         if result.training_iteration < bracket.milestone:
@@ -115,9 +154,19 @@ class HyperBandScheduler(TrialScheduler):
         bracket.record(trial, self._score(result.value(self.metric)))
         if not bracket.ready_to_cut():
             # Wait (paused, checkpointed) for bracket peers to reach the milestone.
+            live = [t for t in bracket.trials if not t.status.is_finished()]
+            self._record_decision(
+                trial.trial_id, SchedulerDecision.PAUSE,
+                iteration=result.training_iteration, reason="milestone_wait",
+                milestone=bracket.milestone, round=bracket.round,
+                bracket=self._brackets.index(bracket),
+                n_arrived=len(bracket.arrived), n_live=len(live))
             return SchedulerDecision.PAUSE
 
+        arrived = dict(bracket.arrived)
+        milestone, rnd = bracket.milestone, bracket.round
         keep = bracket.cut()
+        records = self._cut_records(bracket, keep, arrived, milestone, rnd)
         my_decision = SchedulerDecision.PAUSE
         for t in runner.trials:
             verdict = keep.get(t.trial_id)
@@ -127,12 +176,19 @@ class HyperBandScheduler(TrialScheduler):
                 my_decision = (
                     SchedulerDecision.CONTINUE if verdict else SchedulerDecision.STOP
                 )
+                self._record_decision(t.trial_id, my_decision,
+                                      iteration=result.training_iteration,
+                                      reason="cut", **records[t.trial_id])
                 if not verdict:
                     self.n_stopped += 1
             elif verdict:
+                self._record_decision(t.trial_id, "PROMOTE", reason="cut",
+                                      **records[t.trial_id])
                 self._promote.append(t.trial_id)
             else:
                 if t.status == TrialStatus.PAUSED:
+                    self._record_decision(t.trial_id, SchedulerDecision.STOP,
+                                          reason="cut", **records[t.trial_id])
                     runner.stop_trial(t)
                     self.n_stopped += 1
         return my_decision
@@ -145,16 +201,49 @@ class HyperBandScheduler(TrialScheduler):
         bracket.trials = [t for t in bracket.trials if t.trial_id != trial.trial_id]
         # The error may have been the peer everyone was waiting on — re-check.
         if bracket.ready_to_cut():
+            arrived = dict(bracket.arrived)
+            milestone, rnd = bracket.milestone, bracket.round
             keep = bracket.cut()
+            records = self._cut_records(bracket, keep, arrived, milestone, rnd)
             for t in runner.trials:
                 verdict = keep.get(t.trial_id)
                 if verdict is None:
                     continue
                 if verdict:
+                    self._record_decision(t.trial_id, "PROMOTE",
+                                          reason="cut_after_error",
+                                          **records[t.trial_id])
                     self._promote.append(t.trial_id)
                 elif t.status == TrialStatus.PAUSED:
+                    self._record_decision(t.trial_id, SchedulerDecision.STOP,
+                                          reason="cut_after_error",
+                                          **records[t.trial_id])
                     runner.stop_trial(t)
                     self.n_stopped += 1
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "brackets": [b.state_dict() for b in self._brackets],
+            "trial_bracket": {tid: self._brackets.index(b)
+                              for tid, b in self._trial_bracket.items()},
+            "next_s": self._next_s,
+            "promote": list(self._promote),
+            "n_stopped": self.n_stopped,
+        }
+
+    def load_state_dict(self, state: Dict[str, Any],
+                        trials: Optional[Dict[str, Trial]] = None) -> None:
+        # Rebuild bracket shells in recorded order, then restore their state.
+        self._brackets = []
+        self._next_s = self.s_max
+        for bs in state["brackets"]:
+            b = self._open_bracket()
+            b.load_state_dict(bs, trials=trials)
+        self._trial_bracket = {str(tid): self._brackets[int(i)]
+                               for tid, i in state["trial_bracket"].items()}
+        self._next_s = int(state["next_s"])
+        self._promote = [str(t) for t in state["promote"]]
+        self.n_stopped = int(state["n_stopped"])
 
     # -- trial selection ----------------------------------------------------------
     def choose_trial_to_run(self, runner) -> Optional[Trial]:

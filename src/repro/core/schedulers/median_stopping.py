@@ -7,7 +7,7 @@ guard cold starts.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -62,8 +62,26 @@ class MedianStoppingRule(TrialScheduler):
         best_so_far = max(self._scores[trial.trial_id])
         if best_so_far < median:
             self.n_stopped += 1
-            return SchedulerDecision.STOP if self.hard_stop else SchedulerDecision.PAUSE
-        return SchedulerDecision.CONTINUE
+            verdict = SchedulerDecision.STOP if self.hard_stop else SchedulerDecision.PAUSE
+        else:
+            verdict = SchedulerDecision.CONTINUE
+        self._record_decision(trial.trial_id, verdict,
+                              iteration=result.training_iteration,
+                              reason="median", step=step, score=score,
+                              best_so_far=best_so_far, median=median,
+                              n_others=len(others),
+                              grace_period=self.grace_period,
+                              min_samples=self.min_samples_required)
+        return verdict
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"scores": {tid: list(s) for tid, s in self._scores.items()},
+                "n_stopped": self.n_stopped}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self._scores = {str(tid): [float(v) for v in s]
+                        for tid, s in state["scores"].items()}
+        self.n_stopped = int(state["n_stopped"])
 
     def debug_string(self) -> str:
         return f"MedianStoppingRule: {self.n_stopped} trials stopped"

@@ -118,11 +118,34 @@ class PopulationBasedTraining(TrialScheduler):
         # explored config (paper: "restart a trial with an updated
         # hyperparameter configuration").
         donor.checkpoint.pinned = True  # survive keep_last rotation until applied
+        new_config = self._explore(donor.config)
         trial.scheduler_state["restore_from"] = donor.checkpoint
-        trial.scheduler_state["new_config"] = self._explore(donor.config)
+        trial.scheduler_state["new_config"] = new_config
         trial.scheduler_state["cloned_from"] = donor.trial_id
         self.n_exploits += 1
+        my_score = next((s for s, t in scored if t.trial_id == trial.trial_id),
+                        None)
+        donor_score = next((s for s, t in scored
+                            if t.trial_id == donor.trial_id), None)
+        self._record_decision(
+            trial.trial_id, SchedulerDecision.RESTART_WITH_CONFIG,
+            iteration=result.training_iteration, reason="exploit",
+            donor=donor.trial_id, donor_score=donor_score, my_score=my_score,
+            quantile_fraction=self.quantile_fraction, n_bottom=n_q,
+            population=len(scored), new_config=new_config)
         return SchedulerDecision.RESTART_WITH_CONFIG
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"last_perturb": dict(self._last_perturb),
+                "n_exploits": self.n_exploits,
+                "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self._last_perturb = {str(k): int(v)
+                              for k, v in state["last_perturb"].items()}
+        self.n_exploits = int(state["n_exploits"])
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = state["rng"]
 
     def debug_string(self) -> str:
         return f"PBT: {self.n_exploits} exploit/explore events"

@@ -107,16 +107,38 @@ class GPSearcher(Searcher):
         self._count += 1
         base = sample_space(self.space, self._rng)
         if len(self._history) < self.n_startup:
+            self._record_suggest(trial_id, strategy="random_startup",
+                                 n_obs=len(self._history),
+                                 n_startup=self.n_startup)
             return base
         X = np.stack([self._encode(c) for c, _ in self._history])
         y = np.asarray([s for _, s in self._history])  # higher better
         try:
             gp = _GP(X, y, length_scale=self.ls)
         except np.linalg.LinAlgError:
+            self._record_suggest(trial_id, strategy="random_fallback",
+                                 n_obs=len(self._history),
+                                 reason="gp_cholesky_failed")
             return base
         cands = self._rng.uniform(0, 1, size=(self.n_candidates, X.shape[1]))
         mean, std = gp.predict(cands)
         best = y.max()
         z = (mean - best - self.xi) / std
         ei = (mean - best - self.xi) * _norm_cdf(z) + std * _norm_pdf(z)
-        return self._decode_into(cands[int(np.argmax(ei))], base)
+        i = int(np.argmax(ei))
+        self._record_suggest(trial_id, strategy="gp_ei",
+                             n_obs=len(self._history), best_score=float(best),
+                             ei=float(ei[i]), posterior_mean=float(mean[i]),
+                             posterior_std=float(std[i]))
+        return self._decode_into(cands[i], base)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"rng": self._rng.bit_generator.state,
+                "history": [[dict(c), float(s)] for c, s in self._history],
+                "count": self._count}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = state["rng"]
+        self._history = [(dict(c), float(s)) for c, s in state["history"]]
+        self._count = int(state["count"])

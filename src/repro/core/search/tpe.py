@@ -120,10 +120,32 @@ class TPESearcher(Searcher):
         self._count += 1
         if len(self._history) < self.n_startup:
             cfg = sample_space(self.space, self._rng)
+            self._record_suggest(trial_id, strategy="random_startup",
+                                 n_obs=len(self._history),
+                                 n_startup=self.n_startup)
         else:
             cfg = self._suggest_tpe()
+            n_good = max(1, int(np.ceil(self.gamma * len(self._history))))
+            self._record_suggest(trial_id, strategy="tpe",
+                                 n_obs=len(self._history), n_good=n_good,
+                                 n_bad=len(self._history) - n_good,
+                                 gamma=self.gamma)
         self._pending[trial_id] = cfg
         return cfg
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"rng": self._rng.bit_generator.state,
+                "history": [[dict(c), float(s)] for c, s in self._history],
+                "pending": {tid: dict(c) for tid, c in self._pending.items()},
+                "count": self._count}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = state["rng"]
+        self._history = [(dict(c), float(s)) for c, s in state["history"]]
+        self._pending = {str(tid): dict(c)
+                         for tid, c in state["pending"].items()}
+        self._count = int(state["count"])
 
     def _split(self) -> Tuple[List[Dict], List[Dict]]:
         ranked = sorted(self._history, key=lambda cv: cv[1], reverse=True)

@@ -178,6 +178,17 @@ def main() -> None:
                     help="write the self-contained HTML run report to "
                          "<log-dir>/report.html at experiment end (requires "
                          "--log-dir; survives an aborting sweep)")
+    ap.add_argument("--decisions", default="on",
+                    choices=["on", "full", "off"],
+                    help="journal scheduler/searcher verdicts as typed "
+                         "DECISION records with their inputs (DESIGN.md §10); "
+                         "'full' includes CONTINUE verdicts, 'off' disables "
+                         "(query them post-hoc with repro.launch.explain)")
+    ap.add_argument("--flightrec", default=None, metavar="DIR",
+                    help="dump a crash-forensics bundle (last-N events + "
+                         "decisions, scheduler/searcher state, trial table) "
+                         "to DIR on SIGTERM/abort; defaults to "
+                         "<log-dir>/flightrec when --log-dir is set")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -237,6 +248,8 @@ def main() -> None:
         metrics_interval=args.metrics_interval,
         log_dir=args.log_dir,
         report=args.report,
+        decisions={"on": True, "full": "full", "off": False}[args.decisions],
+        flight_recorder=args.flightrec,
         live_table=args.live_table,
         verbose=True,
         seed=args.seed,

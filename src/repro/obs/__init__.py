@@ -24,13 +24,15 @@ import threading
 from typing import Any, Dict, Optional
 
 from .analysis import ExperimentAnalysis, TrialRecord
+from .flightrec import FlightRecorder, SearchStateSnapshotter, json_safe
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .tracing import NULL_TRACER, Span, Tracer
 
 __all__ = ["Observability", "NULL_OBS",
            "Tracer", "Span", "NULL_TRACER",
            "MetricsRegistry", "Counter", "Gauge", "Histogram",
-           "ExperimentAnalysis", "TrialRecord"]
+           "ExperimentAnalysis", "TrialRecord",
+           "FlightRecorder", "SearchStateSnapshotter", "json_safe"]
 
 METRICS_SCHEMA_VERSION = 1
 

@@ -27,12 +27,73 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-__all__ = ["TrialRecord", "ExperimentAnalysis", "DECISION_EVENTS"]
+__all__ = ["TrialRecord", "ExperimentAnalysis", "DECISION_EVENTS",
+           "format_decision"]
 
 # The scheduler/fault decision kinds reconstructed into per-trial timelines
-# (lowercased on the wire by JSONLLogger.on_event).
+# (lowercased on the wire by JSONLLogger.on_event).  "decision" is the typed
+# provenance record (schema v3, DESIGN.md §10): a scheduler/searcher/runner
+# verdict carrying the inputs that produced it.
 DECISION_EVENTS = ("restarted", "resized", "resize_failed", "credits",
-                  "killed", "heartbeat_missed")
+                  "killed", "heartbeat_missed", "decision")
+
+
+def format_decision(info: Dict[str, Any]) -> str:
+    """One-line human rendering of a DECISION record's ``info`` payload.
+
+    Shared by the explain CLI and the HTML report's provenance table, so
+    both surfaces answer "why?" with the same words.  Deterministic: pure
+    function of the record, %.6g for floats.
+    """
+    def _f(v: Any) -> str:
+        if isinstance(v, float):
+            return f"{v:.6g}"
+        return str(v)
+
+    verdict = info.get("verdict", "?")
+    by = info.get("by", info.get("source", "?"))
+    inputs = info.get("inputs") or {}
+    reason = inputs.get("reason")
+    if reason == "stopping_criterion":
+        detail = (f"{inputs.get('criterion')} reached its bound "
+                  f"({_f(inputs.get('value'))} >= {_f(inputs.get('bound'))})")
+    elif reason == "result_done":
+        detail = "trainable reported done"
+    elif reason == "max_t":
+        detail = f"reached max_t={_f(inputs.get('max_t'))}"
+    elif reason == "rung":
+        detail = (f"rung@{_f(inputs.get('milestone'))} score "
+                  f"{_f(inputs.get('score'))} vs cutoff "
+                  f"{_f(inputs.get('cutoff'))} "
+                  f"(n={_f(inputs.get('n_rung'))}, rf={_f(inputs.get('rf'))})")
+    elif reason == "milestone_wait":
+        detail = (f"waiting at milestone {_f(inputs.get('milestone'))} "
+                  f"round {_f(inputs.get('round'))} "
+                  f"({_f(inputs.get('n_arrived'))}/{_f(inputs.get('n_live'))} "
+                  f"arrived)")
+    elif reason in ("cut", "cut_after_error"):
+        detail = (f"halving cut@{_f(inputs.get('milestone'))} rank "
+                  f"{_f(inputs.get('rank'))}/{_f(inputs.get('n_live'))} "
+                  f"(keep {_f(inputs.get('n_keep'))}, score "
+                  f"{_f(inputs.get('score'))} vs cut "
+                  f"{_f(inputs.get('cut_score'))})")
+    elif reason == "median":
+        detail = (f"best-so-far {_f(inputs.get('best_so_far'))} vs median "
+                  f"{_f(inputs.get('median'))} of {_f(inputs.get('n_others'))} "
+                  f"trials at step {_f(inputs.get('step'))}")
+    elif reason == "exploit":
+        detail = (f"exploit donor {inputs.get('donor')} "
+                  f"(donor score {_f(inputs.get('donor_score'))} vs mine "
+                  f"{_f(inputs.get('my_score'))}, bottom "
+                  f"{_f(inputs.get('n_bottom'))}/{_f(inputs.get('population'))})")
+    elif "strategy" in inputs:
+        extras = {k: v for k, v in sorted(inputs.items()) if k != "strategy"}
+        kv = " ".join(f"{k}={_f(v)}" for k, v in extras.items())
+        detail = f"suggested via {inputs['strategy']}" + (f" ({kv})" if kv else "")
+    else:
+        kv = " ".join(f"{k}={_f(v)}" for k, v in sorted(inputs.items()))
+        detail = kv or "(no inputs recorded)"
+    return f"{verdict} by {by}: {detail}"
 
 _NUMERIC = (int, float)
 
@@ -71,10 +132,18 @@ class TrialRecord:
         return max(vals) if mode == "max" else min(vals)
 
     def decision_timeline(self) -> List[Dict[str, Any]]:
-        """RESTARTED/RESIZED/CREDITS/KILLED/... decisions, in order."""
+        """RESTARTED/RESIZED/CREDITS/KILLED/... fault events merged with the
+        typed DECISION provenance records (schema v3), in journal order."""
         return [
             {"t": t, "seq": seq, "kind": kind, "info": info}
             for t, seq, kind, info in self.events if kind in DECISION_EVENTS
+        ]
+
+    def decisions(self) -> List[Dict[str, Any]]:
+        """Just the typed DECISION records (verdict + inputs), in order."""
+        return [
+            {"t": t, "seq": seq, "info": info}
+            for t, seq, kind, info in self.events if kind == "decision"
         ]
 
 
@@ -204,6 +273,10 @@ class ExperimentAnalysis:
     def decision_timeline(self, trial_id: str) -> List[Dict[str, Any]]:
         r = self.records.get(trial_id)
         return r.decision_timeline() if r is not None else []
+
+    def decisions(self, trial_id: str) -> List[Dict[str, Any]]:
+        r = self.records.get(trial_id)
+        return r.decisions() if r is not None else []
 
     def status_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}

@@ -395,6 +395,41 @@ def _fault_table(analysis: ExperimentAnalysis) -> str:
     return "".join(out)
 
 
+def _provenance_table(analysis: ExperimentAnalysis) -> str:
+    """Decision provenance (DESIGN.md §10): per-trial terminal verdicts with
+    the inputs that produced them, rendered via ``format_decision`` so the
+    report answers "why?" with the same words as the explain CLI."""
+    from .analysis import format_decision
+    rows = []
+    n_total = 0
+    for tid in sorted(analysis.records):
+        decs = analysis.records[tid].decisions()
+        if not decs:
+            continue
+        n_total += len(decs)
+        # The last non-SUGGEST decision is the trial's fate; fall back to
+        # the suggestion record for trials that ran to completion untouched.
+        fate = next((d for d in reversed(decs)
+                     if d["info"].get("verdict") != "SUGGEST"), decs[-1])
+        rows.append((tid, len(decs), fate))
+    if not rows:
+        return ""
+    out = ["<h2>Decision provenance</h2><div class='card'>",
+           "<table><tr><th>trial</th><th class='num'>decisions</th>"
+           "<th class='num'>t</th><th>last verdict (why)</th></tr>"]
+    for tid, n, fate in rows[:_MAX_GANTT_ROWS]:
+        out.append(f"<tr><td>{_esc(tid)}</td><td class='num'>{n}</td>"
+                   f"<td class='num'>{_fmt(fate['t'])}</td>"
+                   f"<td>{_esc(format_decision(fate['info']))}</td></tr>")
+    out.append("</table>")
+    if len(rows) > _MAX_GANTT_ROWS:
+        out.append(f"<p class='note'>first {_MAX_GANTT_ROWS} of {len(rows)} "
+                   f"trials with decision records</p>")
+    out.append(f"<p class='note'>{n_total} DECISION records across "
+               f"{len(rows)} trials (schema v3 journal)</p></div>")
+    return "".join(out)
+
+
 def _profile_table(analysis: ExperimentAnalysis) -> str:
     rows = [(tid, analysis.records[tid].profile)
             for tid in sorted(analysis.records)
@@ -480,6 +515,7 @@ def build_report(journal_path: Optional[str] = None,
     parts.append("<h2>Faults &amp; scheduler decisions</h2><div class='card'>")
     parts.append(_fault_table(analysis))
     parts.append("</div>")
+    parts.append(_provenance_table(analysis))
     parts.append(_profile_table(analysis))
     if metrics_path:
         parts.append("<h2>Control-plane metrics</h2><div class='card'>")

@@ -10,7 +10,8 @@ milliseconds — which is what makes thousand-trial fault matrices affordable
 in CI (tests/test_scenarios.py).
 """
 from ..core.clock import Clock, VirtualClock, WallClock, use_clock
-from .invariants import (check_all, check_event_log, check_fault_accounting,
+from .invariants import (check_all, check_decision_provenance,
+                         check_event_log, check_fault_accounting,
                          check_no_slice_leaks, check_serial_equivalence)
 from .scenarios import (RecordingLogger, Scenario, ScenarioResult,
                         crash_storm, resize_churn, run_scenario,
@@ -23,5 +24,6 @@ __all__ = [
     "Scenario", "ScenarioResult", "RecordingLogger",
     "crash_storm", "straggler_cascade", "resize_churn", "run_scenario",
     "check_all", "check_no_slice_leaks", "check_event_log",
-    "check_fault_accounting", "check_serial_equivalence",
+    "check_fault_accounting", "check_decision_provenance",
+    "check_serial_equivalence",
 ]

@@ -21,7 +21,7 @@ from ..core.trial import TrialStatus
 from .scenarios import Scenario, ScenarioResult, run_scenario
 
 __all__ = ["check_no_slice_leaks", "check_event_log", "check_fault_accounting",
-           "check_all", "check_serial_equivalence"]
+           "check_decision_provenance", "check_all", "check_serial_equivalence"]
 
 
 def check_no_slice_leaks(result: ScenarioResult) -> None:
@@ -105,11 +105,99 @@ def check_fault_accounting(result: ScenarioResult, strict: bool = True) -> None:
                 f"produced HEARTBEAT_MISSED: {sorted(missing)[:5]}")
 
 
+def check_decision_provenance(result: ScenarioResult) -> None:
+    """Every stopped/perturbed trial left a DECISION record whose inputs
+    reconcile with the journaled metric stream (DESIGN.md §10).
+
+    Runner stopping-criterion verdicts must reconcile *exactly* (the journaled
+    value IS the stream's value — FIFO-exact); ASHA rung and HyperBand cut
+    verdicts reconcile as *bounds* (score below cutoff / rank past the keep
+    line), because the cutoff is a function of scheduler-internal rung state
+    the journal only witnesses through the record itself.  PBT exploits must
+    name a real donor whose journaled score beats the victim's."""
+    sched = result.runner.scheduler
+    metric = getattr(sched, "metric", "loss")
+    mode = getattr(sched, "mode", "min")
+    name = result.scenario.name
+    trial_ids = {t.trial_id for t in result.trials}
+    by_trial: Dict[str, List[Dict[str, Any]]] = {}
+    for e in result.recorder.of(EventType.DECISION):
+        by_trial.setdefault(e.trial_id, []).append(e.info)
+        assert e.trial_id in trial_ids, (
+            f"{name}: DECISION record for unknown trial {e.trial_id}")
+
+    for t in result.trials:
+        decs = by_trial.get(t.trial_id, [])
+        stream = {r.training_iteration: r.metrics for r in t.results}
+        if t.status == TrialStatus.TERMINATED:
+            stops = [d for d in decs if d.get("verdict") == "STOP"]
+            assert stops, (
+                f"{name}: {t.trial_id} TERMINATED with no STOP decision "
+                f"(verdicts seen: {[d.get('verdict') for d in decs]})")
+            inputs = stops[-1].get("inputs") or {}
+            it = stops[-1].get("iteration")
+            reason = inputs.get("reason")
+            if reason == "stopping_criterion":
+                crit, bound, value = (inputs["criterion"], inputs["bound"],
+                                      inputs["value"])
+                assert value >= bound, (
+                    f"{name}: {t.trial_id} stopped on {crit} with "
+                    f"value {value} below bound {bound}")
+                if crit == "training_iteration" and stream:
+                    assert value == max(stream), (
+                        f"{name}: {t.trial_id} stop record says "
+                        f"{crit}={value} but stream ends at {max(stream)}")
+                elif stream and it in stream and crit in stream[it]:
+                    assert abs(value - stream[it][crit]) < 1e-12, (
+                        f"{name}: {t.trial_id} stop record {crit}={value} "
+                        f"!= journaled {stream[it][crit]} at iter {it}")
+            elif reason == "rung":           # ASHA — bound + stream reconcile
+                assert inputs["score"] < inputs["cutoff"], (
+                    f"{name}: {t.trial_id} ASHA-stopped with score "
+                    f"{inputs['score']} >= cutoff {inputs['cutoff']}")
+                if it in stream and metric in stream[it]:
+                    expected = (stream[it][metric] if mode == "max"
+                                else -stream[it][metric])
+                    assert abs(inputs["score"] - expected) < 1e-9, (
+                        f"{name}: {t.trial_id} rung score {inputs['score']} "
+                        f"!= journaled {expected} at iter {it}")
+            elif reason in ("cut", "cut_after_error"):   # HyperBand — bounds
+                assert inputs["rank"] >= inputs["n_keep"], (
+                    f"{name}: {t.trial_id} cut at rank {inputs['rank']} "
+                    f"inside the keep line {inputs['n_keep']}")
+                assert inputs["score"] <= inputs["cut_score"] + 1e-12, (
+                    f"{name}: {t.trial_id} cut with score {inputs['score']} "
+                    f"above cut_score {inputs['cut_score']}")
+            elif reason == "median":
+                assert inputs["best_so_far"] < inputs["median"], (
+                    f"{name}: {t.trial_id} median-stopped with best "
+                    f"{inputs['best_so_far']} >= median {inputs['median']}")
+            elif reason == "max_t":
+                assert it is None or it >= inputs["max_t"], (
+                    f"{name}: {t.trial_id} max_t-stopped at iter {it} "
+                    f"< max_t {inputs['max_t']}")
+        for d in decs:                        # PBT perturbations, any status
+            if d.get("verdict") != "RESTART_WITH_CONFIG":
+                continue
+            inputs = d.get("inputs") or {}
+            donor = inputs.get("donor")
+            assert donor in trial_ids and donor != t.trial_id, (
+                f"{name}: {t.trial_id} exploit names donor {donor!r} that "
+                f"is not another trial in this run")
+            if (inputs.get("donor_score") is not None
+                    and inputs.get("my_score") is not None):
+                assert inputs["donor_score"] >= inputs["my_score"], (
+                    f"{name}: {t.trial_id} exploited a donor scoring "
+                    f"{inputs['donor_score']} below its own "
+                    f"{inputs['my_score']}")
+
+
 def check_all(result: ScenarioResult, strict: bool = True,
               gapless: bool = True) -> None:
     check_no_slice_leaks(result)
     check_event_log(result, gapless=gapless)
     check_fault_accounting(result, strict=strict)
+    check_decision_provenance(result)
 
 
 def check_serial_equivalence(

@@ -36,6 +36,7 @@ from ..core.resources import Resources
 from ..core.runner import TrialRunner
 from ..core.trial import Trial
 from ..dist.submesh import SlicePool
+from ..obs.flightrec import FlightRecorder
 from .sim import SimTrainable, reset_faults
 
 __all__ = ["Scenario", "ScenarioResult", "RecordingLogger", "run_scenario",
@@ -85,6 +86,7 @@ class ScenarioResult:
     pool: SlicePool
     clock: VirtualClock
     recorder: RecordingLogger
+    flightrec: Optional[FlightRecorder] = None
     wall_elapsed_s: float = 0.0
 
     @property
@@ -108,6 +110,7 @@ def run_scenario(
     obs: Optional[Any] = None,
     token: Optional[str] = None,
     journal_path: Optional[str] = None,
+    decisions: Any = True,
 ) -> ScenarioResult:
     """Run one scenario on a fresh ``VirtualClock`` to completion.
 
@@ -122,10 +125,13 @@ def run_scenario(
     ``bench_faults`` rely on.
 
     ``journal_path`` additionally tees the event stream through a
-    ``JSONLLogger`` (v2 journal with run_header), so a scenario run leaves
+    ``JSONLLogger`` (v3 journal with run_header), so a scenario run leaves
     an ``ExperimentAnalysis``-readable artifact on disk.  The header's
-    ``run_id`` is pinned to ``token`` to keep same-token runs byte-identical.
+    ``run_id`` is pinned to ``token`` to keep same-token runs byte-identical
+    — the flight recorder is pinned to the same id, so forensic bundles from
+    identical-token runs are byte-identical too (ISSUE 8 comparability fix).
     """
+    import os as _os
     import time as _wall
 
     token = token if token is not None else f"{scenario.name}-{next(_token_counter)}"
@@ -139,8 +145,12 @@ def run_scenario(
     journal = None
     if journal_path is not None:
         journal = JSONLLogger(journal_path, clock=clock,
-                              run_id=f"run-{token}", executor=executor)
+                              run_id=f"run-{token}", executor=executor,
+                              decisions=decisions is not False)
         logger = CompositeLogger([recorder, journal])
+    flightrec = FlightRecorder(
+        clock=clock, run_id=f"run-{token}",
+        out_dir=_os.environ.get("REPRO_FLIGHTREC_DIR", "flightrec"))
     t0 = _wall.monotonic()
     with use_clock(clock):
         store = ObjectStore()
@@ -176,6 +186,8 @@ def run_scenario(
             max_failures=scenario.max_failures,
             broker=broker,
             obs=obs,
+            decisions=decisions,
+            flight_recorder=flightrec,
         )
         for i, config in enumerate(scenario.configs):
             cfg = dict(config)
@@ -188,13 +200,22 @@ def run_scenario(
                 stopping_criteria={"training_iteration": scenario.stop_iteration},
                 trial_id=f"{token}-{i:05d}",
             ))
-        trials = runner.run(max_steps=max_steps)
+        try:
+            trials = runner.run(max_steps=max_steps)
+        except BaseException:
+            # A controller exception IS the crash-forensics use case: leave a
+            # bundle behind (CI uploads the dump dir with if: failure()).
+            try:
+                flightrec.dump(runner, ex, reason="abort")
+            except Exception:
+                pass
+            raise
     if journal is not None:
         journal.close()
     reset_faults(token)
     return ScenarioResult(
         scenario=scenario, trials=trials, runner=runner, executor=ex,
-        pool=pool, clock=clock, recorder=recorder,
+        pool=pool, clock=clock, recorder=recorder, flightrec=flightrec,
         wall_elapsed_s=_wall.monotonic() - t0)
 
 

@@ -43,6 +43,26 @@ def _v2_lines():
     ]
 
 
+def _v3_lines():
+    """A hand-built v3 journal: v2 shape + decisions flag + DECISION records."""
+    return [
+        json.dumps({"event": "run_header", "schema_version": 3,
+                    "run_id": "run-y", "clock": "VirtualClock",
+                    "executor": "concurrent", "decisions": True, "t": 0.0}),
+        json.dumps({"event": "result", "trial_id": "a", "iteration": 1,
+                    "config": {"lr": 0.1}, "metrics": {"loss": 1.0}, "t": 1.0}),
+        json.dumps({"event": "decision", "trial_id": "a", "seq": 9,
+                    "info": {"source": "scheduler",
+                             "by": "AsyncHyperBandScheduler",
+                             "verdict": "STOP", "iteration": 1,
+                             "inputs": {"reason": "rung", "milestone": 1,
+                                        "cutoff": -0.5, "score": -1.0,
+                                        "n_rung": 4, "rf": 4}}, "t": 1.0}),
+        json.dumps({"event": "complete", "trial_id": "a",
+                    "status": "TERMINATED", "iterations": 1, "t": 1.1}),
+    ]
+
+
 class TestJournalParsing:
     def test_v2_journal_with_header(self):
         an = ExperimentAnalysis.from_lines(_v2_lines())
@@ -85,6 +105,35 @@ class TestJournalParsing:
         ]
         an = ExperimentAnalysis.from_lines(lines)
         assert an.get("a").count("future_thing") == 1
+
+    def test_v3_journal_decisions(self):
+        an = ExperimentAnalysis.from_lines(_v3_lines())
+        assert an.header["schema_version"] == 3
+        assert an.header["decisions"] is True
+        decs = an.decisions("a")
+        assert len(decs) == 1
+        info = decs[0]["info"]
+        assert info["verdict"] == "STOP" and info["inputs"]["reason"] == "rung"
+        # merged into the decision timeline alongside fault events
+        assert [e["kind"] for e in an.decision_timeline("a")] == ["decision"]
+
+    def test_v2_reader_tolerates_decision_records(self):
+        """A v2-headered stream carrying DECISION records (e.g. a mixed or
+        concatenated journal) parses benignly: unknown-record tolerance."""
+        lines = _v2_lines()[:-2] + [_v3_lines()[2]] + _v2_lines()[-2:]
+        an = ExperimentAnalysis.from_lines(lines)
+        assert an.header["schema_version"] == 2
+        assert an.get("a").count("decision") == 1
+        assert an.n_skipped_lines == 0
+
+    def test_v3_reader_tolerates_v2_and_v1_streams(self):
+        """The v3-era reader on pre-decision streams: no decisions, no crash,
+        and the missing ``decisions`` header flag reads as absent."""
+        v2 = ExperimentAnalysis.from_lines(_v2_lines())
+        assert v2.header.get("decisions") is None
+        assert v2.decisions("a") == []
+        v1 = ExperimentAnalysis.from_lines(_v2_lines()[1:])  # header-less
+        assert v1.header is None and v1.decisions("a") == []
 
     def test_best_trial_and_dataframe(self):
         an = ExperimentAnalysis.from_lines(_v2_lines())
@@ -135,9 +184,13 @@ class TestScenarioJournal:
                 1 if t.status == TrialStatus.ERROR else 0), t.trial_id
             assert r.status == t.status.value
             tl = an.decision_timeline(t.trial_id)
-            assert all(e["kind"] == "restarted" for e in tl)
+            # v3: fault events merged with typed DECISION provenance records
+            assert all(e["kind"] in ("restarted", "decision") for e in tl)
             # timeline is time-ordered
             assert [e["t"] for e in tl] == sorted(e["t"] for e in tl)
+            if t.status == TrialStatus.TERMINATED:
+                decs = an.decisions(t.trial_id)
+                assert decs and decs[-1]["info"]["verdict"] == "STOP"
         # the storm scripted crashes -> some trial actually restarted
         assert any(an.get(t.trial_id).count("restarted") for t in res.trials)
         # errored trials got terminal complete records too

@@ -348,7 +348,8 @@ class TestJSONLHeader:
         assert header == {"event": "run_header",
                           "schema_version": JSONLLogger.SCHEMA_VERSION,
                           "run_id": "run-42", "clock": "VirtualClock",
-                          "executor": "serial", "t": vc._epoch}
+                          "executor": "serial", "decisions": True,
+                          "t": vc._epoch}
 
     def test_old_readers_stay_compatible(self, tmp_path):
         """A v1-era reader that filters on the ``event`` field skips the

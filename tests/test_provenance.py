@@ -1,0 +1,699 @@
+"""Decision provenance (DESIGN.md §10): journaled scheduler/searcher verdicts,
+explain surfaces, durable scheduler/searcher state, the crash-forensics
+flight recorder, and the ``repro.launch.explain`` CLI.
+
+Acceptance (ISSUE 8): the explain CLI answers "why did trial X stop/pause/
+get-perturbed" from the journal alone for FIFO/ASHA/HyperBand/MedianStopping/
+PBT, and a SIGTERM'd 100-trial VirtualClock crash storm leaves a forensic
+bundle from which the CLI reproduces the same answers byte-identically across
+two identical-token runs.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (ASHAScheduler, CheckpointManager, FIFOScheduler,
+                        GPSearcher, GridSearcher, HyperBandScheduler,
+                        MedianStoppingRule, ObjectStore,
+                        PopulationBasedTraining, RandomSearcher, Result,
+                        SchedulerDecision, SerialMeshExecutor, TPESearcher,
+                        Trainable, Trial, TrialRunner, TrialStatus,
+                        run_experiments, uniform)
+from repro.core.events import EventType
+from repro.launch.explain import main as explain_main
+from repro.obs.analysis import ExperimentAnalysis, format_decision
+from repro.obs.flightrec import (FlightRecorder, SearchStateSnapshotter,
+                                 json_safe)
+from repro.testing import (RecordingLogger, check_decision_provenance,
+                           crash_storm, run_scenario)
+
+
+class DecayTrainable(Trainable):
+    """loss = quality + 0.8^iter — separable per-trial quality."""
+
+    def setup(self, config):
+        self.q = config["quality"]
+        self.x = 1.0
+
+    def step(self):
+        self.x *= 0.8
+        return {"loss": self.q + self.x}
+
+    def save(self):
+        return {"x": self.x, "q": self.q}
+
+    def restore(self, state):
+        self.x = state["x"]
+        self.q = state["q"]
+
+    def reset_config(self, cfg):
+        self.q = cfg["quality"]
+        return True
+
+
+def run_qualities(qualities, scheduler, max_iter=20, devices=4,
+                  journal_path=None):
+    """Run one quality per trial; returns (trials dict, RecordingLogger)."""
+    from repro.core.loggers import CompositeLogger, JSONLLogger
+
+    store = ObjectStore()
+    executor = SerialMeshExecutor(
+        trainable_cls_resolver=lambda name: DecayTrainable,
+        checkpoint_manager=CheckpointManager(store),
+        total_devices=devices, checkpoint_freq=1)
+    recorder = RecordingLogger()
+    logger = recorder
+    journal = None
+    if journal_path is not None:
+        journal = JSONLLogger(journal_path, run_id="run-prov")
+        logger = CompositeLogger([recorder, journal])
+    runner = TrialRunner(scheduler, executor, logger=logger,
+                         stopping_criteria={"training_iteration": max_iter})
+    for i, q in enumerate(qualities):
+        runner.add_trial(Trial({"quality": q}, trial_id=f"t{i:03d}",
+                               stopping_criteria={"training_iteration": max_iter}))
+    trials = runner.run()
+    if journal is not None:
+        journal.close()
+    return {t.trial_id: t for t in trials}, recorder
+
+
+def decision_infos(recorder, trial_id=None):
+    out = [e.info for e in recorder.of(EventType.DECISION)
+           if trial_id is None or e.trial_id == trial_id]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# explain_last — scheduler and searcher verdicts carry their inputs
+# ---------------------------------------------------------------------------
+
+class TestExplainLast:
+    def test_asha_rung_stop_inputs(self):
+        sched = ASHAScheduler(metric="loss", mode="min", max_t=10,
+                              grace_period=1, reduction_factor=2)
+        trials = [Trial({"i": i}, trial_id=f"a{i}") for i in range(3)]
+        for t in trials:
+            sched.on_trial_add(None, t)
+        sched.on_result(None, trials[0], Result("a0", 1, {"loss": 0.1}))
+        # a1 beats the 1-sample cutoff (-0.05 > -0.1), so only a2 gets cut
+        sched.on_result(None, trials[1], Result("a1", 1, {"loss": 0.05}))
+        d = sched.on_result(None, trials[2], Result("a2", 1, {"loss": 5.0}))
+        assert d == SchedulerDecision.STOP
+        rec = sched.explain_last()
+        assert rec["trial_id"] == "a2" and rec["verdict"] == "STOP"
+        inp = rec["inputs"]
+        assert inp["reason"] == "rung" and inp["milestone"] == 1
+        assert inp["score"] == -5.0 and inp["score"] < inp["cutoff"]
+        assert inp["n_rung"] == 2 and inp["rf"] == 2
+        # the drain queue holds every recorded verdict, then empties
+        drained = sched.pop_decisions()
+        assert [r["trial_id"] for r in drained if r["verdict"] == "STOP"] == ["a2"]
+        assert sched.pop_decisions() == []
+
+    def test_asha_max_t_stop(self):
+        sched = ASHAScheduler(metric="loss", mode="min", max_t=5,
+                              grace_period=1)
+        t = Trial({}, trial_id="m0")
+        sched.on_trial_add(None, t)
+        assert sched.on_result(None, t, Result("m0", 5, {"loss": 0.1})) \
+            == SchedulerDecision.STOP
+        assert sched.explain_last()["inputs"] == {"reason": "max_t", "max_t": 5}
+
+    def test_median_stop_inputs(self):
+        sched = MedianStoppingRule(metric="loss", mode="min", grace_period=1,
+                                   min_samples_required=2)
+        ts = [Trial({}, trial_id=f"m{i}") for i in range(3)]
+        for step in (1, 2):
+            sched.on_result(None, ts[0], Result("m0", step, {"loss": 0.1}))
+            sched.on_result(None, ts[1], Result("m1", step, {"loss": 0.2}))
+        sched.on_result(None, ts[2], Result("m2", 1, {"loss": 5.0}))
+        d = sched.on_result(None, ts[2], Result("m2", 2, {"loss": 5.0}))
+        assert d == SchedulerDecision.STOP
+        inp = sched.explain_last()["inputs"]
+        assert inp["reason"] == "median" and inp["step"] == 2
+        assert inp["best_so_far"] < inp["median"] and inp["n_others"] == 2
+
+    def test_fifo_runner_stop_reason_journaled(self):
+        trials, rec = run_qualities([0.1, 0.5], FIFOScheduler(metric="loss",
+                                                              mode="min"),
+                                    max_iter=5)
+        for tid in trials:
+            infos = decision_infos(rec, tid)
+            assert len(infos) == 1
+            info = infos[0]
+            assert info["source"] == "runner" and info["verdict"] == "STOP"
+            assert info["inputs"] == {"reason": "stopping_criterion",
+                                      "criterion": "training_iteration",
+                                      "bound": 5, "value": 5}
+
+    def test_hyperband_cut_records(self):
+        sched = HyperBandScheduler(metric="loss", mode="min", max_t=9, eta=3)
+        trials, rec = run_qualities(list(np.linspace(0.0, 2.0, 9)), sched,
+                                    max_iter=9, devices=3)
+        cuts = [i for i in decision_infos(rec)
+                if i["inputs"].get("reason") in ("cut", "cut_after_error")]
+        assert cuts, "a 9-trial eta=3 bracket must have cut at least once"
+        stopped = [i for i in cuts if i["verdict"] == "STOP"]
+        kept = [i for i in cuts if i["verdict"] in ("CONTINUE", "PROMOTE")]
+        assert stopped and kept
+        for i in stopped:
+            assert i["inputs"]["rank"] >= i["inputs"]["n_keep"]
+            assert i["inputs"]["score"] <= i["inputs"]["cut_score"]
+        for i in kept:
+            assert i["inputs"]["rank"] < i["inputs"]["n_keep"]
+        # milestone_wait PAUSE verdicts are journaled too
+        waits = [i for i in decision_infos(rec)
+                 if i["inputs"].get("reason") == "milestone_wait"]
+        assert all(i["verdict"] == "PAUSE" for i in waits)
+
+    def test_pbt_exploit_records_lineage(self):
+        sched = PopulationBasedTraining(
+            metric="loss", mode="min", perturbation_interval=3,
+            hyperparam_mutations={"quality": uniform(0.0, 2.0)},
+            quantile_fraction=0.34, seed=0)
+        trials, rec = run_qualities([0.0, 1.0, 2.0], sched, max_iter=15,
+                                    devices=3)
+        exploits = [i for i in decision_infos(rec)
+                    if i["verdict"] == "RESTART_WITH_CONFIG"]
+        assert len(exploits) == sched.n_exploits >= 1
+        for i in exploits:
+            inp = i["inputs"]
+            assert inp["reason"] == "exploit"
+            assert inp["donor"] in trials
+            assert inp["donor_score"] >= inp["my_score"]
+            assert "quality" in inp["new_config"]
+
+    def test_searcher_explain_last(self):
+        space = {"x": uniform(0.0, 1.0)}
+        rs = RandomSearcher(space, max_trials=4, seed=1)
+        assert rs.explain_last() is None
+        rs.suggest("s0")
+        assert rs.explain_last()["inputs"] == {
+            "strategy": "random", "n_suggested": 1, "max_trials": 4}
+        gs = GridSearcher({"x": uniform(0.0, 1.0)}, num_samples=3, seed=2)
+        gs.suggest("g0")
+        gs.suggest("g1")
+        rec = gs.explain_last()
+        assert rec["trial_id"] == "g1"
+        assert rec["inputs"] == {"strategy": "grid", "index": 1}
+
+    def test_gp_tpe_explain_posterior_inputs(self):
+        space = {"x": uniform(0.0, 1.0)}
+        gp = GPSearcher(space, n_startup_trials=2, seed=3)
+        gp.suggest("g0")
+        assert gp.explain_last()["inputs"]["strategy"] == "random_startup"
+        for i in range(3):
+            gp.observe(f"g{i}", {"x": 0.1 * (i + 1)}, 1.0 - 0.2 * i, True)
+        gp.suggest("g3")
+        inp = gp.explain_last()["inputs"]
+        assert inp["strategy"] == "gp_ei" and inp["n_obs"] == 3
+        assert {"best_score", "ei", "posterior_mean",
+                "posterior_std"} <= set(inp)
+        tpe = TPESearcher(space, n_startup_trials=2, seed=4)
+        for i in range(3):
+            tpe.observe(f"t{i}", {"x": 0.2 * (i + 1)}, float(i), True)
+        tpe.suggest("t3")
+        inp = tpe.explain_last()["inputs"]
+        assert inp["strategy"] == "tpe"
+        assert inp["n_good"] + inp["n_bad"] == inp["n_obs"] == 3
+
+
+# ---------------------------------------------------------------------------
+# state_dict / load_state_dict — JSON-durable scheduler + searcher state
+# ---------------------------------------------------------------------------
+
+def _json_roundtrip(state):
+    return json.loads(json.dumps(json_safe(state)))
+
+
+class TestDurableState:
+    def test_fifo_stateless(self):
+        assert FIFOScheduler().state_dict() == {}
+
+    def test_asha_roundtrip(self):
+        s1 = ASHAScheduler(metric="loss", mode="min", max_t=10,
+                           grace_period=1, reduction_factor=2)
+        trials = [Trial({}, trial_id=f"a{i}") for i in range(4)]
+        for t in trials:
+            s1.on_trial_add(None, t)
+        for i, t in enumerate(trials[:3]):
+            s1.on_result(None, t, Result(t.trial_id, 1, {"loss": 0.1 * i}))
+        state = _json_roundtrip(s1.state_dict())
+        s2 = ASHAScheduler(metric="loss", mode="min", max_t=10,
+                           grace_period=1, reduction_factor=2)
+        s2.load_state_dict(state)
+        assert _json_roundtrip(s2.state_dict()) == state
+        # restored rung state reproduces the original's next verdict
+        r = Result("a3", 1, {"loss": 9.0})
+        assert s2.on_result(None, trials[3], r) \
+            == s1.on_result(None, trials[3], r) == SchedulerDecision.STOP
+
+    def test_hyperband_roundtrip(self):
+        s1 = HyperBandScheduler(metric="loss", mode="min", max_t=9, eta=3)
+        trials, _ = run_qualities(list(np.linspace(0.0, 2.0, 9)), s1,
+                                  max_iter=9, devices=3)
+        state = _json_roundtrip(s1.state_dict())
+        s2 = HyperBandScheduler(metric="loss", mode="min", max_t=9, eta=3)
+        s2.load_state_dict(state, trials=trials)
+        assert _json_roundtrip(s2.state_dict()) == state
+        assert s2.n_stopped == s1.n_stopped
+
+    def test_median_roundtrip(self):
+        s1 = MedianStoppingRule(metric="loss", mode="min", grace_period=1,
+                                min_samples_required=2)
+        run_qualities([0.0, 0.1, 2.0], s1, max_iter=8, devices=3)
+        state = _json_roundtrip(s1.state_dict())
+        s2 = MedianStoppingRule(metric="loss", mode="min", grace_period=1,
+                                min_samples_required=2)
+        s2.load_state_dict(state)
+        assert _json_roundtrip(s2.state_dict()) == state
+
+    def test_pbt_roundtrip_preserves_rng_stream(self):
+        mk = lambda: PopulationBasedTraining(
+            metric="loss", mode="min", perturbation_interval=3,
+            hyperparam_mutations={"quality": uniform(0.0, 2.0)}, seed=0)
+        s1 = mk()
+        run_qualities([0.0, 1.0, 2.0], s1, max_iter=9, devices=3)
+        state = _json_roundtrip(s1.state_dict())
+        s2 = mk()
+        s2.load_state_dict(state)
+        assert _json_roundtrip(s2.state_dict()) == state
+        # the restored rng continues the exact stream
+        assert s2._explore({"quality": 1.0}) == s1._explore({"quality": 1.0})
+
+    def test_random_searcher_roundtrip(self):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = RandomSearcher(space, seed=5)
+        for i in range(3):
+            s1.suggest(f"r{i}")
+        state = _json_roundtrip(s1.state_dict())
+        s2 = RandomSearcher(space, seed=0)  # seed overwritten by load
+        s2.load_state_dict(state)
+        assert s2.suggest("r3") == s1.suggest("r3")
+
+    def test_grid_searcher_fast_forward(self):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = GridSearcher(space, num_samples=5, seed=6)
+        for i in range(2):
+            s1.suggest(f"g{i}")
+        state = _json_roundtrip(s1.state_dict())
+        s2 = GridSearcher(space, num_samples=5, seed=6)
+        s2.load_state_dict(state)
+        assert s2._n_emitted == 2
+        assert s2.suggest("g2") == s1.suggest("g2")
+
+    @pytest.mark.parametrize("cls,kw", [(GPSearcher, {"n_startup_trials": 2}),
+                                        (TPESearcher, {"n_startup_trials": 2})])
+    def test_model_searcher_roundtrip(self, cls, kw):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = cls(space, seed=7, **kw)
+        for i in range(3):
+            s1.observe(f"o{i}", {"x": 0.2 * (i + 1)}, 1.0 - 0.3 * i, True)
+        state = _json_roundtrip(s1.state_dict())
+        s2 = cls(space, seed=0, **kw)
+        s2.load_state_dict(state)
+        assert s2.suggest("n0") == s1.suggest("n0")
+        assert s2.explain_last()["inputs"] == s1.explain_last()["inputs"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder — bounded rings, forensic bundles, byte-determinism
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_ring_is_bounded(self):
+        fr = FlightRecorder(capacity=16, decision_capacity=8)
+        from repro.core.events import TrialEvent
+        for i in range(100):
+            fr.record_event(TrialEvent(EventType.RESULT, f"t{i}"))
+            fr.record_decision(TrialEvent(EventType.DECISION, f"t{i}"))
+        b = fr.bundle()
+        assert len(b["events"]) == 16 and len(b["decisions"]) == 8
+        assert b["n_events_seen"] == 100
+        # the ring kept the MOST RECENT events
+        assert b["events"][-1]["trial_id"] == "t99"
+
+    def test_json_safe_coerces_everything(self):
+        class Opaque:
+            def __repr__(self):
+                return "<opaque>"
+        v = json_safe({"a": np.float64(1.5), "b": [np.int32(2), Opaque()],
+                       "c": {"d": (1, 2)}})
+        assert json.dumps(v)  # serializes
+        assert v["a"] == 1.5 and v["b"] == [2, "<opaque>"]
+
+    def test_bundle_contents_from_storm(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path / "fr"))
+        res = run_scenario(crash_storm(n_trials=30, seed=2),
+                           lambda: FIFOScheduler(metric="loss", mode="min"),
+                           pool_devices=8, token="fr-bundle")
+        path = res.flightrec.dump(res.runner, res.executor, reason="manual")
+        assert os.path.basename(path) == "run-fr-bundle-00-manual.json"
+        with open(path) as f:
+            b = json.load(f)
+        assert b["run_id"] == "run-fr-bundle" and b["reason"] == "manual"
+        assert b["schema_version"] == 1
+        assert b["decisions"] and b["events"]
+        assert b["scheduler"]["type"] == "FIFOScheduler"
+        tids = [r["trial_id"] for r in b["trials"]]
+        assert tids == sorted(tids) and len(tids) == 30
+        assert b["status_counts"].get("TERMINATED", 0) > 0
+        assert b["pool"]["utilization"] == 0.0  # run finished, pool drained
+        assert b["n_restarts"] == res.runner.n_restarts
+
+    def test_same_token_bundles_byte_identical(self, tmp_path, monkeypatch):
+        paths = []
+        for d in ("one", "two"):
+            monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path / d))
+            res = run_scenario(crash_storm(n_trials=30, seed=2),
+                               lambda: FIFOScheduler(metric="loss",
+                                                     mode="min"),
+                               pool_devices=8, token="fr-det")
+            paths.append(res.flightrec.dump(res.runner, res.executor,
+                                            reason="manual"))
+        b1 = open(paths[0], "rb").read()
+        b2 = open(paths[1], "rb").read()
+        assert b1 == b2
+
+    def test_snapshotter_throttles_on_clock(self, tmp_path):
+        from repro.core.clock import VirtualClock
+        clock = VirtualClock()
+        snap = SearchStateSnapshotter(str(tmp_path / "ss.json"), clock=clock,
+                                      interval_s=10.0)
+        sched = MedianStoppingRule()
+        assert snap.maybe_snapshot(sched) is True
+        assert snap.maybe_snapshot(sched) is False  # inside the window
+        clock._now += 11.0
+        assert snap.maybe_snapshot(sched) is True
+        assert snap.n_snapshots == 2
+        state = json.load(open(str(tmp_path / "ss.json")))
+        assert state["scheduler"]["type"] == "MedianStoppingRule"
+        assert "scores" in state["scheduler"]["state"]
+
+
+# ---------------------------------------------------------------------------
+# provenance invariants + journaling policy over a crash storm
+# ---------------------------------------------------------------------------
+
+class TestProvenanceInvariants:
+    def test_checker_passes_all_schedulers(self):
+        for factory in (
+            lambda: FIFOScheduler(metric="loss", mode="min"),
+            lambda: ASHAScheduler(metric="loss", mode="min", max_t=5,
+                                  grace_period=1, reduction_factor=2),
+            lambda: MedianStoppingRule(metric="loss", mode="min",
+                                       grace_period=1,
+                                       min_samples_required=3),
+        ):
+            res = run_scenario(crash_storm(n_trials=30, seed=5), factory,
+                               pool_devices=8)
+            check_decision_provenance(res)
+
+    def test_checker_catches_missing_records(self):
+        res = run_scenario(crash_storm(n_trials=10, seed=5),
+                           lambda: FIFOScheduler(metric="loss", mode="min"),
+                           pool_devices=4)
+        res.recorder.events = [e for e in res.recorder.events
+                               if e.type != EventType.DECISION]
+        with pytest.raises(AssertionError, match="no STOP decision"):
+            check_decision_provenance(res)
+
+    def test_decisions_off_drains_silently(self):
+        res = run_scenario(crash_storm(n_trials=10, seed=5),
+                           lambda: FIFOScheduler(metric="loss", mode="min"),
+                           pool_devices=4, decisions=False)
+        assert res.recorder.of(EventType.DECISION) == []
+        # nothing left festering in the scheduler's drain queue either
+        assert res.runner.scheduler.pop_decisions() == []
+
+    def test_decisions_full_includes_continue(self, tmp_path):
+        sched = MedianStoppingRule(metric="loss", mode="min", grace_period=1,
+                                   min_samples_required=2)
+        store = ObjectStore()
+        executor = SerialMeshExecutor(
+            trainable_cls_resolver=lambda name: DecayTrainable,
+            checkpoint_manager=CheckpointManager(store),
+            total_devices=3, checkpoint_freq=1)
+        rec = RecordingLogger()
+        runner = TrialRunner(sched, executor, logger=rec, decisions="full",
+                             stopping_criteria={"training_iteration": 6})
+        # serial execution: only the LAST trial sees >= 2 reference trials;
+        # make it the winner so its post-threshold verdicts are CONTINUE
+        for i, q in enumerate([1.5, 1.6, 0.0]):
+            runner.add_trial(Trial({"quality": q}, trial_id=f"f{i}",
+                                   stopping_criteria={"training_iteration": 6}))
+        runner.run()
+        verdicts = {i["verdict"] for i in decision_infos(rec)}
+        assert "CONTINUE" in verdicts  # default policy filters these out
+
+
+# ---------------------------------------------------------------------------
+# explain CLI — journal answers for every scheduler family
+# ---------------------------------------------------------------------------
+
+class TestExplainCLI:
+    def _explain(self, capsys, *args):
+        assert explain_main(list(args)) == 0
+        return capsys.readouterr().out
+
+    def test_fifo_stop_answer(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        run_qualities([0.1], FIFOScheduler(metric="loss", mode="min"),
+                      max_iter=5, journal_path=jp)
+        out = self._explain(capsys, "--journal", jp, "--trial", "t000")
+        assert "trial t000: TERMINATED, 5 iterations" in out
+        assert "training_iteration reached its bound (5 >= 5)" in out
+        assert "fate: STOP by TrialRunner" in out
+
+    def test_asha_stop_answer(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        sched = ASHAScheduler(metric="loss", mode="min", max_t=20,
+                              grace_period=2, reduction_factor=3)
+        trials, rec = run_qualities(list(np.linspace(0.0, 2.0, 16)), sched,
+                                    max_iter=20, journal_path=jp)
+        stopped = next(i for i in decision_infos(rec)
+                       if i["verdict"] == "STOP"
+                       and i["inputs"].get("reason") == "rung")
+        an = ExperimentAnalysis.from_journal(jp)
+        tid = next(t for t in an.trial_ids()
+                   if any((d["info"]["inputs"] or {}).get("reason") == "rung"
+                          and d["info"]["verdict"] == "STOP"
+                          for d in an.decisions(t)))
+        out = self._explain(capsys, "--journal", jp, "--trial", tid)
+        assert "STOP by AsyncHyperBandScheduler" in out
+        assert "rung@" in out and "vs cutoff" in out
+
+    def test_hyperband_cut_answer(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        sched = HyperBandScheduler(metric="loss", mode="min", max_t=9, eta=3)
+        run_qualities(list(np.linspace(0.0, 2.0, 9)), sched, max_iter=9,
+                      devices=3, journal_path=jp)
+        an = ExperimentAnalysis.from_journal(jp)
+        tid = next(t for t in an.trial_ids()
+                   if any(d["info"]["verdict"] == "STOP"
+                          and (d["info"]["inputs"] or {}).get("reason") == "cut"
+                          for d in an.decisions(t)))
+        out = self._explain(capsys, "--journal", jp, "--trial", tid)
+        assert "halving cut@" in out and "STOP by HyperBandScheduler" in out
+
+    def test_median_stop_answer(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        sched = MedianStoppingRule(metric="loss", mode="min", grace_period=2,
+                                   min_samples_required=2)
+        run_qualities([0.0, 0.1, 0.2, 1.5, 1.6, 1.7], sched, max_iter=15,
+                      journal_path=jp)
+        an = ExperimentAnalysis.from_journal(jp)
+        tid = next(t for t in an.trial_ids()
+                   if any((d["info"]["inputs"] or {}).get("reason") == "median"
+                          and d["info"]["verdict"] == "STOP"
+                          for d in an.decisions(t)))
+        out = self._explain(capsys, "--journal", jp, "--trial", tid)
+        assert "best-so-far" in out and "vs median" in out
+
+    def test_pbt_perturb_answer(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        sched = PopulationBasedTraining(
+            metric="loss", mode="min", perturbation_interval=3,
+            hyperparam_mutations={"quality": uniform(0.0, 2.0)},
+            quantile_fraction=0.34, seed=0)
+        run_qualities([0.0, 1.0, 2.0], sched, max_iter=15, devices=3,
+                      journal_path=jp)
+        an = ExperimentAnalysis.from_journal(jp)
+        tid = next(t for t in an.trial_ids()
+                   if any(d["info"]["verdict"] == "RESTART_WITH_CONFIG"
+                          for d in an.decisions(t)))
+        out = self._explain(capsys, "--journal", jp, "--trial", tid)
+        assert "RESTART_WITH_CONFIG by PopulationBasedTraining" in out
+        assert "exploit donor" in out
+
+    def test_unknown_trial_and_pre_v3_journal(self, tmp_path, capsys):
+        jp = str(tmp_path / "ev.jsonl")
+        run_qualities([0.1], FIFOScheduler(metric="loss", mode="min"),
+                      max_iter=3, journal_path=jp)
+        out = self._explain(capsys, "--journal", jp, "--trial", "nope")
+        assert "not in journal" in out
+
+    def test_no_source_errors(self, tmp_path):
+        with pytest.raises(SystemExit):
+            explain_main([str(tmp_path)])  # empty dir: no events.jsonl
+
+    def test_bundle_source(self, tmp_path, capsys, monkeypatch):
+        monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path / "fr"))
+        res = run_scenario(crash_storm(n_trials=20, seed=4),
+                           lambda: FIFOScheduler(metric="loss", mode="min"),
+                           pool_devices=8, token="cli-bundle")
+        path = res.flightrec.dump(res.runner, res.executor, reason="manual")
+        tid = next(t.trial_id for t in res.trials
+                   if t.status == TrialStatus.TERMINATED)
+        out = self._explain(capsys, "--bundle", path, "--trial", tid)
+        assert "bundle run-cli-bundle: reason=manual" in out
+        assert f"trial {tid}: TERMINATED" in out
+        assert "reached its bound" in out
+
+
+# ---------------------------------------------------------------------------
+# run_experiments wiring — journal + snapshot + dump-on-abort + explain
+# ---------------------------------------------------------------------------
+
+class TestExperimentWiring:
+    def test_log_dir_gets_decisions_snapshot_and_explain(self, tmp_path,
+                                                         capsys):
+        log_dir = str(tmp_path / "exp")
+        run_experiments(
+            DecayTrainable, None,
+            searcher=RandomSearcher({"quality": uniform(0.0, 1.0)},
+                                    max_trials=3, seed=0),
+            scheduler=FIFOScheduler(metric="loss", mode="min"),
+            stop={"training_iteration": 4}, total_devices=2,
+            checkpoint_freq=1, log_dir=log_dir, verbose=False)
+        an = ExperimentAnalysis.from_journal(
+            os.path.join(log_dir, "events.jsonl"))
+        assert an.header["schema_version"] == 3
+        assert an.header["decisions"] is True
+        for tid in an.trial_ids():
+            decs = an.decisions(tid)
+            assert decs and decs[-1]["info"]["verdict"] == "STOP"
+        # searcher+scheduler state checkpoint landed next to the journal
+        state = json.load(open(os.path.join(log_dir, "search_state.json")))
+        assert state["scheduler"]["type"] == "FIFOScheduler"
+        assert state["searcher"]["type"] == "RandomSearcher"
+        # searcher SUGGEST decisions journaled with their inputs
+        suggests = [d for tid in an.trial_ids() for d in an.decisions(tid)
+                    if d["info"]["verdict"] == "SUGGEST"]
+        assert len(suggests) == 3
+        assert all(d["info"]["inputs"]["strategy"] == "random"
+                   for d in suggests)
+        # the explain CLI discovers the journal from the log_dir
+        assert explain_main([log_dir]) == 0
+        out = capsys.readouterr().out
+        assert "SUGGEST by RandomSearcher" in out
+        assert "reached its bound" in out
+
+    def test_abort_dumps_bundle(self, tmp_path):
+        log_dir = str(tmp_path / "boom")
+
+        class AlwaysCrash(Trainable):
+            def setup(self, config):
+                pass
+
+            def step(self):
+                raise RuntimeError("scripted")
+
+        with pytest.raises(RuntimeError, match="max_experiment_failures"):
+            run_experiments(
+                AlwaysCrash, {"x": uniform(0, 1)}, num_samples=4,
+                scheduler=FIFOScheduler(metric="loss", mode="min"),
+                stop={"training_iteration": 3}, total_devices=2,
+                max_experiment_failures=1, log_dir=log_dir, verbose=False)
+        dumps = os.listdir(os.path.join(log_dir, "flightrec"))
+        assert len(dumps) == 1 and dumps[0].endswith("-abort.json")
+        b = json.load(open(os.path.join(log_dir, "flightrec", dumps[0])))
+        assert b["reason"] == "abort" and b["status_counts"].get("ERROR")
+
+    def test_decisions_off_writes_none(self, tmp_path):
+        log_dir = str(tmp_path / "off")
+        run_experiments(
+            DecayTrainable, {"quality": uniform(0.0, 1.0)}, num_samples=2,
+            scheduler=FIFOScheduler(metric="loss", mode="min"),
+            stop={"training_iteration": 3}, total_devices=2,
+            log_dir=log_dir, decisions=False, verbose=False)
+        an = ExperimentAnalysis.from_journal(
+            os.path.join(log_dir, "events.jsonl"))
+        assert an.header["decisions"] is False
+        assert all(not an.decisions(tid) for tid in an.trial_ids())
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM acceptance — 100-trial storm, bundle + explain byte-identical
+# ---------------------------------------------------------------------------
+
+_SIGTERM_CHILD = textwrap.dedent("""\
+    import os, signal, sys, time
+    from repro.core import FIFOScheduler
+    from repro.testing import crash_storm, run_scenario
+
+    token = sys.argv[1]
+    res = run_scenario(crash_storm(n_trials=100, seed=11),
+                       lambda: FIFOScheduler(metric="loss", mode="min"),
+                       pool_devices=8, token=token)
+    armed = res.flightrec.install_signal_handler(res.runner, res.executor)
+    assert armed, "main thread must own the SIGTERM handler"
+    print("READY", flush=True)
+    time.sleep(120)  # parent SIGTERMs long before this expires
+""")
+
+
+class TestSigtermAcceptance:
+    def _run_child(self, tmp_path, sub, token):
+        out_dir = str(tmp_path / sub)
+        env = dict(os.environ, REPRO_FLIGHTREC_DIR=out_dir,
+                   PYTHONPATH="src")
+        script = str(tmp_path / "child.py")
+        with open(script, "w") as f:
+            f.write(_SIGTERM_CHILD)
+        proc = subprocess.Popen([sys.executable, script, token], env=env,
+                                cwd="/root/repo", stdout=subprocess.PIPE,
+                                text=True)
+        assert proc.stdout.readline().strip() == "READY"
+        proc.send_signal(signal.SIGTERM)
+        rc = proc.wait(timeout=60)
+        assert rc == 143, f"SIGTERM exit must be 143, got {rc}"
+        path = os.path.join(out_dir, f"run-{token}-00-sigterm.json")
+        assert os.path.exists(path), os.listdir(out_dir)
+        return path
+
+    def test_sigterm_bundle_and_explain_byte_identical(self, tmp_path,
+                                                       capsys):
+        p1 = self._run_child(tmp_path, "one", "sigterm-det")
+        p2 = self._run_child(tmp_path, "two", "sigterm-det")
+        assert open(p1, "rb").read() == open(p2, "rb").read()
+        b = json.load(open(p1))
+        assert b["reason"] == "sigterm" and b["run_id"] == "run-sigterm-det"
+        assert len(b["trials"]) == 100 and b["decisions"]
+        # the explain CLI answers identically from either bundle
+        outs = []
+        for p in (p1, p2):
+            assert explain_main(["--bundle", p]) == 0
+            outs.append(capsys.readouterr().out)
+        assert outs[0] == outs[1]
+        assert "STOP by TrialRunner" in outs[0]
+
+
+class TestReportProvenanceSection:
+    def test_report_has_provenance_table(self, tmp_path):
+        from repro.obs.report import build_report
+        jp = str(tmp_path / "ev.jsonl")
+        run_scenario(crash_storm(n_trials=20, seed=9),
+                     lambda: FIFOScheduler(metric="loss", mode="min"),
+                     pool_devices=8, token="rep-prov", journal_path=jp)
+        html = build_report(journal_path=jp, metric="loss", mode="min")
+        assert "Decision provenance" in html
+        assert "DECISION records across" in html
+        assert "STOP by TrialRunner" in html
