@@ -1,0 +1,165 @@
+"""Cluster-tier benchmark: localhost 3-host socket sweep vs the process tier.
+
+Same sweep, two control planes:
+
+- **process** — workers over spawn pipes, one shared SlicePool (the in-host
+  tier bench_process gates),
+- **cluster** — ``ClusterMeshExecutor`` over the length-prefixed socket
+  transport: 3 simulated hosts on loopback, per-host SlicePools, host
+  heartbeats, content-addressed checkpoint fetch on every adoption.
+
+The delta is the cluster control plane's whole bill — framing, the accept
+loop, host bookkeeping, CAS hashing — measured in end-to-end wall and in
+steady-state result throughput (boot amortized).  On loopback with
+real-work steps the two tiers should be close; the CI smoke gates the
+cluster tier at >= --min-ratio of the process tier's end-to-end throughput
+so a framing or heartbeat regression that taxes every result shows up as a
+red build.
+
+    python benchmarks/bench_cluster.py --trials 6 --iters 20 --step-ms 20
+    python benchmarks/bench_cluster.py --smoke   # CI smoke
+
+Writes benchmarks/results/bench_cluster.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_root = os.path.join(_here, os.pardir)
+_src = os.path.join(_root, "src")
+for p in (_src,):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import (CheckpointManager, FIFOScheduler, ObjectStore,
+                        ProcessMeshExecutor, Resources, TrainableFactory,
+                        Trial, TrialRunner, TrialStatus)
+
+try:
+    from .common import write_csv
+except ImportError:
+    sys.path.insert(0, _here)
+    from common import write_csv
+
+# Spawned children import the trainable from repro.testing.simworker (already
+# on every worker's path via sys_path below) — no faults configured, so each
+# step is `step_wall_s` of real "device work" plus the lr-separable loss.
+SIM_FACTORY = TrainableFactory(
+    target="repro.testing.simworker:SimWorkerTrainable", sys_path=(_src,))
+
+
+def run_sweep(kind: str, n_trials: int, iters: int, step_s: float,
+              n_hosts: int = 3, devices_per_trial: int = 2) -> Dict:
+    total = n_trials * devices_per_trial
+    common = dict(checkpoint_manager=CheckpointManager(ObjectStore()),
+                  checkpoint_freq=5,
+                  factory_resolver=lambda name: SIM_FACTORY)
+    if kind == "cluster":
+        from repro.cluster import ClusterMeshExecutor
+        per_host = -(-total // n_hosts)  # ceil: roster holds the whole sweep
+        executor = ClusterMeshExecutor(
+            hosts=f"{n_hosts}x{per_host}", transport="socket",
+            placement="fixed", devices_per_trial=devices_per_trial, **common)
+    else:
+        from repro.dist.submesh import SlicePool
+        executor = ProcessMeshExecutor(
+            total_devices=total, slice_pool=SlicePool(n_virtual=total),
+            **common)
+    runner = TrialRunner(FIFOScheduler(metric="loss", mode="min"), executor,
+                         trainable_name="SimWorkerTrainable",
+                         stopping_criteria={"training_iteration": iters})
+    for i in range(n_trials):
+        runner.add_trial(Trial(
+            {"lr": 0.01 + i * 0.002, "sim_id": f"b{i}", "step_wall_s": step_s},
+            trainable_name="SimWorkerTrainable",
+            resources=Resources(cpu=1.0, devices=devices_per_trial),
+            stopping_criteria={"training_iteration": iters}))
+    t0 = time.time()
+    trials = runner.run()
+    wall = time.time() - t0
+    assert all(t.status == TrialStatus.TERMINATED for t in trials), \
+        [(t.status, t.error) for t in trials]
+    n_results = sum(t.training_iteration for t in trials)
+    ts = sorted(r.timestamp for t in trials for r in t.results)
+    steady = (len(ts) - 1) / max(ts[-1] - ts[0], 1e-9) if len(ts) > 1 else 0.0
+    row = {"bench": "cluster_exec", "executor": kind, "n_trials": n_trials,
+           "iters": iters, "step_ms": round(step_s * 1000, 1),
+           "n_hosts": n_hosts if kind == "cluster" else 1,
+           "wall_s": round(wall, 3),
+           "results_per_s": round(n_results / wall, 2),
+           "steady_results_per_s": round(steady, 2),
+           "host_evictions": (executor.n_host_evictions
+                              if kind == "cluster" else 0)}
+    return row
+
+
+def run(n_trials: int = 6, iters: int = 20, step_ms: float = 20.0,
+        n_hosts: int = 3) -> List[Dict]:
+    """Harness entry (benchmarks.run): returns the result rows."""
+    step_s = step_ms / 1000.0
+    rows: List[Dict] = []
+    for kind in ("process", "cluster"):
+        row = run_sweep(kind, n_trials, iters, step_s, n_hosts=n_hosts)
+        print(f"[bench_cluster] {kind:8s} wall={row['wall_s']:.3f}s "
+              f"throughput={row['results_per_s']:.2f} results/s "
+              f"(steady {row['steady_results_per_s']:.2f}/s)")
+        rows.append(row)
+    by = {r["executor"]: r for r in rows}
+    for row in rows:
+        row["ratio_vs_process"] = round(
+            row["results_per_s"] / max(by["process"]["results_per_s"], 1e-9), 3)
+        row["steady_ratio_vs_process"] = round(
+            row["steady_results_per_s"]
+            / max(by["process"]["steady_results_per_s"], 1e-9), 3)
+    path = write_csv("bench_cluster", rows)
+    print(f"[bench_cluster] cluster/process steady throughput: "
+          f"{by['cluster']['steady_ratio_vs_process']:.2f}x over {n_hosts} "
+          f"loopback hosts ({n_trials} trials x {iters} iters, "
+          f"~{step_ms:.0f}ms steps) -> {path}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=6)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--step-ms", type=float, default=20.0,
+                    help="real per-step work, so throughput is work-bound "
+                         "and the control-plane tax is the measured residue")
+    ap.add_argument("--hosts", type=int, default=3)
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="required cluster/process end-to-end throughput "
+                         "ratio; on loopback the socket tier should stay "
+                         "well above half the pipe tier")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: shorter sweep, same assertion")
+    args = ap.parse_args()
+    if args.smoke:
+        args.iters = min(args.iters, 12)
+        args.trials = min(args.trials, 4)
+
+    rows = run(args.trials, args.iters, args.step_ms, n_hosts=args.hosts)
+    cluster_row = [r for r in rows if r["executor"] == "cluster"][0]
+    if cluster_row.get("host_evictions"):
+        print(f"[bench_cluster] FAIL: {cluster_row['host_evictions']} host "
+              "evictions during a healthy loopback sweep", file=sys.stderr)
+        return 1
+    # Gate end-to-end, not steady-state: staggered socket dial-ins widen the
+    # first-to-last result window and would punish boot order, not framing.
+    ratio = cluster_row["ratio_vs_process"]
+    if ratio < args.min_ratio:
+        print(f"[bench_cluster] FAIL: cluster throughput {ratio:.2f}x "
+              f"of process tier < required {args.min_ratio:.2f}x",
+              file=sys.stderr)
+        return 1
+    print(f"[bench_cluster] PASS: {ratio:.2f}x >= {args.min_ratio:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

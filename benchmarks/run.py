@@ -12,6 +12,7 @@ benchmarks/results/*.csv.
   process      — GIL-contention sweep: process vs thread vs serial executors
   elastic      — elastic slice reclaim vs static placement + lookahead credits
   faults       — crash-storm recovery rate + control-plane overhead per event
+  cluster      — localhost 3-host socket sweep vs the process tier
   vmap         — beyond-paper: stacked-vmap trial execution vs serial
   kernels      — pure-jnp oracle timings (TPU kernel baselines)
   roofline     — per-(arch x shape x mesh) table from the dry-run artifacts
@@ -27,13 +28,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="run a single bench (loc|convergence|overhead|"
-                         "scaling|async|process|elastic|faults|vmap|kernels|"
-                         "roofline)")
+                         "scaling|async|process|elastic|faults|cluster|vmap|"
+                         "kernels|roofline)")
     args = ap.parse_args()
 
-    from . import (bench_async, bench_convergence, bench_elastic,
-                   bench_faults, bench_kernels, bench_loc, bench_overhead,
-                   bench_process, bench_roofline, bench_scaling, bench_vmap)
+    from . import (bench_async, bench_cluster, bench_convergence,
+                   bench_elastic, bench_faults, bench_kernels, bench_loc,
+                   bench_overhead, bench_process, bench_roofline,
+                   bench_scaling, bench_vmap)
     benches = {
         "loc": bench_loc.run,
         "convergence": bench_convergence.run,
@@ -43,6 +45,7 @@ def main() -> None:
         "process": bench_process.run,
         "elastic": bench_elastic.run,
         "faults": lambda: bench_faults.run(2000),
+        "cluster": bench_cluster.run,
         "vmap": bench_vmap.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,

@@ -214,7 +214,12 @@ class ResourceBroker:
         if self.policy is None:
             return
         ex = runner.executor
-        pool = getattr(ex, "slice_pool", None)
+        # Per-trial pool when the executor places across hosts (cluster tier);
+        # the shared pool otherwise.  Rebalancing stays within one failure
+        # domain — slices never span hosts.
+        pool_fn = getattr(ex, "_pool_for", None)
+        pool = (pool_fn(trial) if callable(pool_fn)
+                else getattr(ex, "slice_pool", None))
         if pool is None or not ex.trial_idle(trial):
             return
         sl = ex.held_slice(trial.trial_id)

@@ -145,8 +145,16 @@ class _SlicedExecutor(TrialExecutor):
         else:
             self._m_acquire = self._m_ckpt_save = self._m_ckpt_restore = None
 
+    def _pool_for(self, trial: Trial) -> Optional[Any]:
+        """The SlicePool this trial places on.  Single-host tiers share one
+        pool; the cluster tier overrides this to the trial's host pool, which
+        is what lets ``resize_trial`` / the elastic broker / slice release all
+        stay host-correct without knowing about hosts."""
+        return self.slice_pool
+
     def has_resources(self, trial: Trial) -> bool:
-        if self.slice_pool is not None and not self.slice_pool.can_fit(trial.resources.devices):
+        pool = self._pool_for(trial)
+        if pool is not None and not pool.can_fit(trial.resources.devices):
             return False
         return self.accountant.has_room(trial.resources)
 
@@ -154,16 +162,17 @@ class _SlicedExecutor(TrialExecutor):
         """Accountant + pool placement for one trial — the shared first-fit
         hot path, timed (``pool.acquire_us``) and traced (``slice.acquire``)."""
         self.accountant.acquire(trial.resources)
-        if self.slice_pool is None:
+        pool = self._pool_for(trial)
+        if pool is None:
             return
         tracer = self.obs.tracer
         if self._m_acquire is None and not tracer.enabled:
             self._slices[trial.trial_id] = \
-                self.slice_pool.acquire(trial.resources.devices)
+                pool.acquire(trial.resources.devices)
             return
         t0 = tracer.clock.time() if tracer.enabled else 0.0
         p0 = _perf()
-        sl = self.slice_pool.acquire(trial.resources.devices)
+        sl = pool.acquire(trial.resources.devices)
         if self._m_acquire is not None:
             self._m_acquire.observe((_perf() - p0) * 1e6)
         self._slices[trial.trial_id] = sl
@@ -175,14 +184,15 @@ class _SlicedExecutor(TrialExecutor):
     def _instantiate(self, trial: Trial) -> Trainable:
         cls = self._resolve(trial.trainable_name)
         config = dict(trial.config)
-        if self.slice_pool is not None:
+        if trial.trial_id in self._slices:
             config["_slice"] = self._slices[trial.trial_id]
         return cls(config)
 
     def _release(self, trial: Trial) -> None:
         self.accountant.release(trial.resources)
-        if self.slice_pool is not None and trial.trial_id in self._slices:
-            self.slice_pool.release(self._slices.pop(trial.trial_id))
+        pool = self._pool_for(trial)
+        if pool is not None and trial.trial_id in self._slices:
+            pool.release(self._slices.pop(trial.trial_id))
 
     def _set_requeue_status(self, trial: Trial) -> None:
         trial.set_status(
@@ -201,10 +211,11 @@ class _SlicedExecutor(TrialExecutor):
         rebuilds the mesh around this.
         """
         from .resources import Resources
+        pool = self._pool_for(trial)
         old_res = trial.resources
         new_res = Resources(cpu=old_res.cpu, devices=new_devices)
         old_sl = self._slices[trial.trial_id]
-        new_sl = self.slice_pool.resize(old_sl, new_devices)
+        new_sl = pool.resize(old_sl, new_devices)
         try:
             self.accountant.release(old_res)
             self.accountant.acquire(new_res)
@@ -212,8 +223,8 @@ class _SlicedExecutor(TrialExecutor):
             # Pool moved but the accountant refused: put the exact old range
             # back (nothing else allocated in between — runner thread).
             self.accountant.acquire(old_res)
-            self.slice_pool.release(new_sl)
-            restored = self.slice_pool.acquire_at(old_sl.start, old_sl.size)
+            pool.release(new_sl)
+            restored = pool.acquire_at(old_sl.start, old_sl.size)
             self._slices[trial.trial_id] = restored
             raise
         self._slices[trial.trial_id] = new_sl
@@ -224,8 +235,9 @@ class _SlicedExecutor(TrialExecutor):
                       new_sl: Any) -> None:
         """Roll a ``_swap_slice`` back after a failed rebuild: the trial ends
         up on the *exact* old device range its live mesh still covers."""
-        self.slice_pool.release(new_sl)
-        restored = self.slice_pool.acquire_at(old_sl.start, old_sl.size)
+        pool = self._pool_for(trial)
+        pool.release(new_sl)
+        restored = pool.acquire_at(old_sl.start, old_sl.size)
         self.accountant.release(trial.resources)
         self.accountant.acquire(old_res)
         self._slices[trial.trial_id] = restored

@@ -162,6 +162,8 @@ def run_experiments(
     seed: int = 0,
     max_steps: int = 10_000_000,
     executor: Union[None, str, TrialExecutor] = None,
+    hosts: Any = None,                      # cluster tier: roster (int/str/specs)
+    placement: Any = "roofline",            # cluster tier: placement policy
     max_failures: int = 0,
     max_experiment_failures: int = 0,
     heartbeat_timeout: float = 60.0,
@@ -262,7 +264,7 @@ def run_experiments(
     else:
         name = getattr(trainable, "__name__", "trainable")
         register_trainable(name, trainable)
-    if executor == "process":
+    if executor in ("process", "cluster"):
         try:
             resolve_worker_factory(name)
         except KeyError as e:
@@ -306,11 +308,19 @@ def run_experiments(
             executor = ProcessMeshExecutor(
                 heartbeat_timeout=heartbeat_timeout,
                 straggler_deadline=straggler_deadline, **common)
+        elif kind == "cluster":
+            from ..cluster import ClusterMeshExecutor
+            common.pop("slice_pool", None)  # cluster builds per-host pools
+            executor = ClusterMeshExecutor(
+                hosts=hosts if hosts is not None else 2,
+                placement=placement,
+                heartbeat_timeout=heartbeat_timeout,
+                straggler_deadline=straggler_deadline, **common)
         else:
             raise ValueError(
                 f"unknown executor {kind!r}; pass 'serial', 'concurrent', "
-                f"'process', or a TrialExecutor instance (VmapExecutor needs "
-                f"a VectorTrainableSpec)")
+                f"'process', 'cluster', or a TrialExecutor instance "
+                f"(VmapExecutor needs a VectorTrainableSpec)")
     exec_kind = (executor if isinstance(executor, str)
                  else type(executor).__name__)
     loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock,

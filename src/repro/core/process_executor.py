@@ -89,6 +89,12 @@ class _WorkerHandle:
         # a bus ERROR would later hit the healthy rebuilt worker.
         self.expecting_reply = False
 
+    @property
+    def transport(self):
+        """The worker's duplex message channel (pipe Connection or a cluster
+        Transport).  None while a socket worker is still dialing in."""
+        return self.worker.transport
+
 
 class ProcessMeshExecutor(BusDrivenExecutor):
     def __init__(
@@ -163,10 +169,22 @@ class ProcessMeshExecutor(BusDrivenExecutor):
 
     # -- pump: child messages -> events / replies -------------------------------------
     def _pump(self) -> None:
+        # Transport-agnostic multiplexing: ``mp_conn.wait`` accepts pipe
+        # Connections AND sockets, so one pump serves both tiers.  A framed
+        # transport exposes its selectable object via ``waitable``; a raw
+        # Connection is its own waitable.
         while not self._pump_shutdown.is_set():
-            handles = {ws.worker.conn: ws
-                       for ws in list(self._workers.values())
-                       if not ws.dead}
+            handles: Dict[Any, _WorkerHandle] = {}
+            transports: Dict[Any, Any] = {}
+            for ws in list(self._workers.values()):
+                if ws.dead:
+                    continue
+                t = ws.transport
+                if t is None:
+                    continue  # socket worker still dialing in
+                w = getattr(t, "waitable", t)
+                handles[w] = ws
+                transports[w] = t
             if not handles:
                 self._pump_shutdown.wait(0.05)
                 continue
@@ -174,12 +192,17 @@ class ProcessMeshExecutor(BusDrivenExecutor):
                 ready = mp_conn.wait(list(handles), timeout=0.2)
             except OSError:
                 continue  # a conn was torn down mid-wait; re-snapshot
-            for conn in ready:
-                ws = handles[conn]
+            for w in ready:
+                ws = handles[w]
                 try:
-                    msg = conn.recv()
-                except (EOFError, OSError):
-                    self._on_worker_death(ws)
+                    msg = transports[w].recv()
+                except (EOFError, OSError) as exc:
+                    if ws.transport is not transports[w]:
+                        # The worker re-attached a fresh transport (cluster
+                        # reconnect) while this snapshot was in flight; the
+                        # stale stream's EOF is not a death.
+                        continue
+                    self._on_recv_error(ws, exc)
                     continue
                 try:
                     self._handle_message(ws, msg)
@@ -192,6 +215,12 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             # No clock kick needed here: bus.publish kicks its own queue
             # channel, and reply_q is consumed by _await_reply's *real*
             # queue.get (reply latency is real-child latency by design).
+
+    def _on_recv_error(self, ws: _WorkerHandle, exc: BaseException) -> None:
+        """A transport recv failed.  For pipes every failure is child death;
+        the cluster tier overrides this to escalate framing corruption to
+        host eviction (DESIGN.md §11) — the pump itself never wedges."""
+        self._on_worker_death(ws)
 
     def _on_worker_death(self, ws: _WorkerHandle) -> None:
         """Pipe hit EOF: the child exited without a protocol goodbye."""
@@ -281,26 +310,31 @@ class ProcessMeshExecutor(BusDrivenExecutor):
 
     def _monitor_loop(self, interval: float) -> None:
         while not self._shutdown_evt.wait(interval):
-            now = self.clock.monotonic()
-            for ws in list(self._workers.values()):
-                if ws.dead or ws.killed or ws.stopping:
-                    continue
-                if not ws.ready:
-                    if self.spawn_timeout > 0 and now - ws.spawned_at > self.spawn_timeout:
-                        self._kill_straggler(ws, now - ws.spawned_at, phase="spawn")
-                    continue
-                if not ws.in_step:
-                    continue
-                elapsed = now - ws.step_started
-                if (self.heartbeat_timeout > 0 and elapsed > self.heartbeat_timeout
-                        and now - ws.last_warned > self.heartbeat_timeout):
-                    ws.last_warned = now
-                    self.bus.publish(TrialEvent(
-                        EventType.HEARTBEAT_MISSED, ws.trial.trial_id,
-                        info={"stalled_s": round(elapsed, 3),
-                              "deadline_s": self.straggler_deadline}))
-                if self.straggler_deadline > 0 and elapsed > self.straggler_deadline:
-                    self._kill_straggler(ws, elapsed, phase="step")
+            self._monitor_tick(self.clock.monotonic())
+
+    def _monitor_tick(self, now: float) -> None:
+        """One monitor pass over the roster; every age compare rides
+        ``clock.monotonic()`` (wall-jump-safe — DESIGN.md §7).  The cluster
+        tier extends this with host-level heartbeat ages."""
+        for ws in list(self._workers.values()):
+            if ws.dead or ws.killed or ws.stopping:
+                continue
+            if not ws.ready:
+                if self.spawn_timeout > 0 and now - ws.spawned_at > self.spawn_timeout:
+                    self._kill_straggler(ws, now - ws.spawned_at, phase="spawn")
+                continue
+            if not ws.in_step:
+                continue
+            elapsed = now - ws.step_started
+            if (self.heartbeat_timeout > 0 and elapsed > self.heartbeat_timeout
+                    and now - ws.last_warned > self.heartbeat_timeout):
+                ws.last_warned = now
+                self.bus.publish(TrialEvent(
+                    EventType.HEARTBEAT_MISSED, ws.trial.trial_id,
+                    info={"stalled_s": round(elapsed, 3),
+                          "deadline_s": self.straggler_deadline}))
+            if self.straggler_deadline > 0 and elapsed > self.straggler_deadline:
+                self._kill_straggler(ws, elapsed, phase="step")
 
     def _kill_straggler(self, ws: _WorkerHandle, elapsed: float, phase: str) -> None:
         """Escalation: SIGKILL the worker, then hand the failure to the
@@ -327,7 +361,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
     # -- lifecycle --------------------------------------------------------------------
     def _worker_config(self, trial: Trial) -> Dict[str, Any]:
         config = dict(trial.config)
-        if self.slice_pool is not None:
+        if trial.trial_id in self._slices:
             sl = self._slices[trial.trial_id]
             # Device handles can't cross a process boundary: ship the slice as
             # a virtual (start, size) window; the child's make_mesh tiles its
@@ -404,14 +438,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             if stale[0] == "DEAD":
                 return None
             if stale[0] == _w.MSG_SAVED:
-                # A timed-out SAVE's payload was spilled but never adopted:
-                # delete it or it strands a checkpoint-sized file for the
-                # life of the spill dir (keys are unique per save, so this
-                # can never touch an adopted checkpoint).
-                try:
-                    self.ckpt.store.delete(stale[1])
-                except OSError:
-                    pass
+                self._discard_stale_saved(stale[1])
         ws.expecting_reply = True
         try:
             if not ws.worker.send(*cmd):
@@ -419,6 +446,17 @@ class ProcessMeshExecutor(BusDrivenExecutor):
             return self._await_reply(ws, tag, timeout)
         finally:
             ws.expecting_reply = False
+
+    def _discard_stale_saved(self, key: str) -> None:
+        """A timed-out SAVE's payload was spilled but never adopted: delete
+        it or it strands a checkpoint-sized file for the life of the spill
+        dir.  Safe here because pipe-tier keys are unique per save — the
+        cluster tier overrides this for content-addressed keys, which CAN be
+        shared with an adopted checkpoint."""
+        try:
+            self.ckpt.store.delete(key)
+        except OSError:
+            pass
 
     def _await_reply(self, ws: _WorkerHandle, tag: str,
                      timeout: Optional[float] = None) -> Optional[tuple]:
@@ -515,7 +553,7 @@ class ProcessMeshExecutor(BusDrivenExecutor):
         is reaped by the _sync_exchange drain)."""
         ws = self._workers.get(trial.trial_id)
         if (ws is None or ws.dead or not ws.ready
-                or self.slice_pool is None
+                or self._pool_for(trial) is None
                 or new_devices == trial.resources.devices):
             return False
         ckpt = self._adopt_saved(ws, trial)

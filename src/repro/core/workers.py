@@ -179,6 +179,12 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
     resume gate is simply "don't send STEP yet", and lookahead credits are
     simply "queue up to k STEPs" — the child itself never changes behavior,
     it just stops idling between a RESULT and the next command.
+
+    ``conn`` is any Transport: an object with ``send(obj)`` / ``recv()`` /
+    ``poll(timeout)`` / ``close()``.  The pipe tier passes a multiprocessing
+    Connection; the cluster tier passes a framed SocketTransport whose closed/
+    corrupt-peer errors subclass EOFError/OSError, so the exception handling
+    below needs no transport-specific branches (repro.cluster.transport).
     """
     trial_id = spec["trial_id"]
     checkpoint_freq = int(spec.get("checkpoint_freq", 0))
@@ -231,15 +237,29 @@ def _child_main(conn, spec: Dict[str, Any]) -> None:
 
     save_seq = itertools.count()
 
+    content_addressed = bool(spec.get("cas"))
+
     def _save_bytes() -> str:
         from .checkpoint import tree_to_bytes
         t0 = _time.time()
         data = tree_to_bytes(trainable.save())
-        # Key is unique per save, not just per iteration: a PBT rewind makes a
-        # worker re-reach the same iteration and save again, and reusing the
-        # key would let the host's LRU serve the stale first payload (and let
-        # keep_last rotation of the old Checkpoint delete the new one's data).
-        key = f"ckpt/{trial_id}/{trainable.iteration}.{os.getpid()}.{next(save_seq)}"
+        if content_addressed:
+            # Cluster tier: the key IS the payload digest (scoped per trial so
+            # keep_last rotation of one trial can never delete another trial's
+            # identical bytes).  The controller re-derives the digest after
+            # fetching across hosts — a torn or tampered spill file fails the
+            # fetch instead of restoring garbage — and identical re-saves
+            # (PBT rewinds) dedupe to one spill file.
+            import hashlib
+            key = f"cas/{trial_id}/{hashlib.sha256(data).hexdigest()}"
+        else:
+            # Key is unique per save, not just per iteration: a PBT rewind
+            # makes a worker re-reach the same iteration and save again, and
+            # reusing the key would let the host's LRU serve the stale first
+            # payload (and let keep_last rotation of the old Checkpoint delete
+            # the new one's data).
+            key = (f"ckpt/{trial_id}/{trainable.iteration}."
+                   f"{os.getpid()}.{next(save_seq)}")
         key = store.put_spilled(data, key=key)
         if trace_on:
             spans.append(("ckpt.save", t0, _time.time() - t0, "ckpt",
@@ -447,6 +467,12 @@ class ProcessWorker:
         }
         ctx = mp.get_context(mp_context) if mp_context else _default_context()
         self.conn, child_conn = ctx.Pipe(duplex=True)
+        # A duplex Pipe Connection already satisfies the Transport surface
+        # (send/recv/poll/close + itself as the waitable): ``transport`` is
+        # what the executor pump multiplexes on, and subclasses (the cluster
+        # tier's socket workers) swap in a framed SocketTransport without the
+        # pump or ``_child_main`` noticing.
+        self.transport: Any = self.conn
         self.process = ctx.Process(
             target=_child_main, args=(child_conn, spec),
             name=f"repro-worker-{trial_id}", daemon=True)
@@ -462,12 +488,13 @@ class ProcessWorker:
         return self.process.is_alive()
 
     def send(self, *msg: Any) -> bool:
-        """Best-effort command send; False when the pipe is already dead."""
+        """Best-effort command send; False when the transport is already
+        dead.  EOFError covers framed transports signalling a closed peer."""
         try:
             with self._send_lock:
-                self.conn.send(msg)
+                self.transport.send(msg)
             return True
-        except (BrokenPipeError, OSError, ValueError):
+        except (BrokenPipeError, OSError, ValueError, EOFError):
             return False
 
     def join(self, timeout: Optional[float] = None) -> bool:
@@ -487,6 +514,6 @@ class ProcessWorker:
 
     def close(self) -> None:
         try:
-            self.conn.close()
+            self.transport.close()
         except OSError:
             pass

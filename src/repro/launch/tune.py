@@ -11,9 +11,25 @@ execution tier: ``serial`` (host time-slicing), ``concurrent`` (one worker
 thread per trial, overlapped JAX dispatch across disjoint slices, heartbeat
 straggler detection), ``process`` (one spawned worker *process* per trial —
 GIL-free host stepping, checkpoint bytes over the ObjectStore spill surface,
-and kill-on-straggle reclamation after ``--straggler-deadline`` seconds), or
+and kill-on-straggle reclamation after ``--straggler-deadline`` seconds),
+``cluster`` (worker processes scheduled across a roster of hosts over the
+length-prefixed socket transport — per-host SlicePools, host heartbeats,
+content-addressed checkpoint fetch, host eviction; DESIGN.md §11), or
 ``vmap`` (homogeneous sweeps as one SPMD program).  ``--max-failures``
 restarts a crashed trial from its last checkpoint.
+
+Cluster quickstart (3 simulated hosts on loopback sockets)::
+
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
+        --scheduler asha --num-samples 8 --executor cluster --hosts 3x8 \
+        --devices-per-trial 4 --max-failures 2
+
+``--hosts`` shapes the roster (``3x8`` = three hosts of eight devices;
+``a:8,b:16`` names heterogeneous ones) and ``--placement roofline``
+right-sizes each trial's slice per host from its roofline profile, falling
+back to ``--devices-per-trial``.  A host that stops heartbeating is evicted;
+its trials restart from their last fetched checkpoint under the same
+``--max-failures`` budget.
 
 ``--elastic greedy`` turns on the elastic control plane (DESIGN.md §6):
 slices of early-stopped trials are absorbed by survivors at their next
@@ -134,7 +150,16 @@ def main() -> None:
     ap.add_argument("--devices-per-trial", type=int, default=8)
     ap.add_argument("--total-devices", type=int, default=256)
     ap.add_argument("--executor", default="serial",
-                    choices=["serial", "concurrent", "process", "vmap"])
+                    choices=["serial", "concurrent", "process", "cluster",
+                             "vmap"])
+    ap.add_argument("--hosts", default="2x8",
+                    help="cluster executor roster: N (hosts x 8 devices), "
+                         "'3x8', or 'name:devs,...' per host (see "
+                         "repro.cluster.parse_hosts)")
+    ap.add_argument("--placement", default="roofline",
+                    choices=["roofline", "fixed"],
+                    help="cluster executor: right-size slices from roofline "
+                         "cost profiles, or place the requested width as-is")
     ap.add_argument("--max-failures", type=int, default=0,
                     help="restart a crashed trial from its last checkpoint up "
                          "to N times before marking it ERROR")
@@ -201,7 +226,7 @@ def main() -> None:
     workload = dict(batch=args.batch, seq_len=args.seq_len,
                     steps_per_iter=args.steps_per_iter,
                     total_steps=args.max_iters * args.steps_per_iter)
-    if args.executor == "process":
+    if args.executor in ("process", "cluster"):
         # Spawn-safe recipe: worker processes rebuild the bound trainable by
         # re-importing make_model_trainable in the child.
         trainable = model_trainable_factory(cfg, **workload)
@@ -224,6 +249,9 @@ def main() -> None:
     if args.executor == "vmap":
         executor = build_vmap_executor(cfg, args)
         pool = None  # lanes replace slices; placement is the stacked program's
+    elif args.executor == "cluster":
+        executor = args.executor
+        pool = None  # per-host pools: the roster is the capacity
     else:
         executor = args.executor
         pool = SlicePool(n_virtual=args.total_devices)
@@ -238,6 +266,8 @@ def main() -> None:
         total_devices=args.total_devices,
         slice_pool=pool,
         executor=executor,
+        hosts=args.hosts if args.executor == "cluster" else None,
+        placement=args.placement,
         max_failures=args.max_failures,
         max_experiment_failures=args.max_experiment_failures,
         heartbeat_timeout=args.heartbeat_timeout,

@@ -175,6 +175,12 @@ class FlightRecorder:
                 "utilization": round(pool.utilization(), 4),
                 "fragments": pool.fragments(),
             } if pool is not None else None)
+            host_state = getattr(executor, "host_state", None)
+            if callable(host_state):
+                try:
+                    out["hosts"] = host_state()
+                except Exception:  # noqa: BLE001 — forensics must not raise
+                    out["hosts"] = None
         return out
 
     # -- dumping -----------------------------------------------------------------

@@ -25,13 +25,21 @@ __all__ = ["check_no_slice_leaks", "check_event_log", "check_fault_accounting",
 
 
 def check_no_slice_leaks(result: ScenarioResult) -> None:
-    """Every slice and every accounted resource returned to the pool."""
-    pool = result.pool
-    assert pool.n_free == pool.n_total, (
-        f"{result.scenario.name}: slice leak — {pool.n_total - pool.n_free} "
-        f"devices still held after the run ({pool!r})")
-    assert pool.fragments() == 0, (
-        f"{result.scenario.name}: free list failed to coalesce ({pool!r})")
+    """Every slice and every accounted resource returned to the pool(s) —
+    the shared pool on in-host tiers, every host's own pool on the cluster
+    tier (an evicted host's pool must drain too: its trials were killed and
+    released, not abandoned)."""
+    name = result.scenario.name
+    pools = ([("", result.pool)] if result.pool is not None else
+             [(f"host {h}: ", host.pool)
+              for h, host in sorted(
+                  getattr(result.executor, "hosts", {}).items())])
+    for tag, pool in pools:
+        assert pool.n_free == pool.n_total, (
+            f"{name}: {tag}slice leak — {pool.n_total - pool.n_free} "
+            f"devices still held after the run ({pool!r})")
+        assert pool.fragments() == 0, (
+            f"{name}: {tag}free list failed to coalesce ({pool!r})")
     acct = result.executor.accountant
     assert acct.available.devices == acct.total.devices, (
         f"{result.scenario.name}: accountant leak — "

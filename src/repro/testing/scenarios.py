@@ -25,7 +25,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from ..core.clock import VirtualClock, use_clock
+from ..core.clock import VirtualClock, WallClock, use_clock
 from ..core.checkpoint import CheckpointManager
 from ..core.concurrent_executor import ConcurrentMeshExecutor
 from ..core.elastic import ResourceBroker, resolve_policy
@@ -75,6 +75,12 @@ class Scenario:
     expected_crashes: int = 0         # total injected step failures (incl. kills)
     expected_fatal: int = 0           # trials whose budget those exhaust
     expected_stragglers: int = 0
+    # cluster tier (executor="cluster"): roster + host-level fault script
+    hosts: Any = None                 # parse_hosts input, e.g. "4x4"
+    host_faults: List[Any] = field(default_factory=list)
+    #   entries: (kind, host, at_s) or (kind, host, at_s, duration_s)
+    #   kinds: "crash" (abrupt death), "partition" (heals after duration)
+    host_timeout: float = 0.0         # silent-host eviction age (0 = default)
 
 
 @dataclass
@@ -83,11 +89,12 @@ class ScenarioResult:
     trials: List[Trial]
     runner: TrialRunner
     executor: Any
-    pool: SlicePool
-    clock: VirtualClock
+    pool: Optional[SlicePool]         # None on the cluster tier (per-host pools)
+    clock: Any                        # VirtualClock (WallClock on "process")
     recorder: RecordingLogger
     flightrec: Optional[FlightRecorder] = None
     wall_elapsed_s: float = 0.0
+    fleet: Optional[Any] = None       # cluster tier's SimFleet (fault script)
 
     @property
     def virtual_elapsed_s(self) -> float:
@@ -132,11 +139,19 @@ def run_scenario(
     identical-token runs are byte-identical too (ISSUE 8 comparability fix).
     """
     import os as _os
+    import tempfile as _tempfile
     import time as _wall
 
     token = token if token is not None else f"{scenario.name}-{next(_token_counter)}"
     reset_faults()
-    clock = VirtualClock()
+    # The process tier runs REAL worker processes: the clock cannot see them,
+    # so fast-forwarding virtual time between their (real) deliveries would
+    # trip the runner's stall detector long before any child speaks.  That
+    # tier runs on wall time with wall-scaled faults; every in-process tier
+    # (serial/concurrent/cluster-virtual) runs on deterministic virtual time.
+    # (The virtual-deadline escalation over real children IS still testable —
+    # by driving the executor directly, as test_virtual_deadline_math does.)
+    clock = WallClock() if executor == "process" else VirtualClock()
     if obs is not None:
         obs.bind_clock(clock)  # span timestamps must ride the virtual axis
     pool = SlicePool(n_virtual=pool_devices)
@@ -165,14 +180,60 @@ def run_scenario(
             clock=clock,
             obs=obs,
         )
+        fleet = None
+        fault_dir = None
+        trainable_name = "SimTrainable"
         if executor == "serial":
             ex = SerialMeshExecutor(**common)
         elif executor == "concurrent":
             ex = ConcurrentMeshExecutor(
                 heartbeat_timeout=scenario.heartbeat_timeout, **common)
+        elif executor == "process":
+            # Satellite tier: the same fault matrix on REAL worker processes.
+            # SimWorkerTrainable persists fault firings as marker files (a
+            # module registry dies at the spawn boundary); the controller
+            # keeps the VirtualClock for its deadline arithmetic while the
+            # children live on wall time — the PR 5 virtual-deadline contract.
+            from ..core.workers import TrainableFactory
+            trainable_name = "SimWorkerTrainable"
+            fault_dir = _tempfile.mkdtemp(prefix=f"repro-simworker-{token}-")
+            factory = TrainableFactory(
+                target="repro.testing.simworker:SimWorkerTrainable")
+            common.pop("trainable_cls_resolver")
+            from ..core.process_executor import ProcessMeshExecutor
+            ex = ProcessMeshExecutor(
+                factory_resolver=lambda _n: factory,
+                heartbeat_timeout=scenario.heartbeat_timeout,
+                spawn_timeout=0,  # spawn ages would fast-forward too
+                **common)
+        elif executor == "cluster":
+            # Simulated host fleet: virtual transports + scripted host faults
+            # on the same deterministic timeline (DESIGN.md §11).
+            from ..cluster import ClusterMeshExecutor
+            from ..cluster.sim import SimFleet
+            from ..core.workers import TrainableFactory
+            common.pop("slice_pool")
+            common.pop("total_devices")  # the roster defines capacity
+            # Virtual workers run in-process, so the import-path factory
+            # resolves to the SAME sim module — scripted faults keep their
+            # shared registry across "process" rebuilds.
+            sim_factory = TrainableFactory(
+                target="repro.testing.sim:SimTrainable")
+            ex = ClusterMeshExecutor(
+                hosts=scenario.hosts if scenario.hosts is not None else "4x4",
+                transport="virtual", placement="fixed",
+                heartbeat_timeout=scenario.heartbeat_timeout,
+                host_timeout=scenario.host_timeout or None,
+                spawn_timeout=0,
+                factory_resolver=lambda _n: sim_factory,
+                **common)
+            fleet = SimFleet(ex, clock)
+            for fault in scenario.host_faults:
+                fleet.script(*fault[:2], at=fault[2],
+                             duration=fault[3] if len(fault) > 3 else None)
         else:
-            raise ValueError(f"run_scenario drives in-host tiers only, "
-                             f"not {executor!r}")
+            raise ValueError(f"run_scenario drives serial/concurrent/process/"
+                             f"cluster tiers, not {executor!r}")
         broker = None
         if scenario.elastic is not None or lookahead != 1:
             broker = ResourceBroker(policy=resolve_policy(scenario.elastic),
@@ -181,7 +242,7 @@ def run_scenario(
             scheduler_factory(),
             ex,
             logger=logger,
-            trainable_name="SimTrainable",
+            trainable_name=trainable_name,
             stopping_criteria={"training_iteration": scenario.stop_iteration},
             max_failures=scenario.max_failures,
             broker=broker,
@@ -193,13 +254,26 @@ def run_scenario(
             cfg = dict(config)
             cfg.setdefault("sim_id", f"{scenario.name}-{i:05d}")
             cfg["sim_token"] = token
+            if fault_dir is not None:
+                # Process tier: wall-time fault vocabulary.  Virtual durations
+                # make no sense for real children (they'd sleep real hours),
+                # so scripted timing is dropped and stragglers sleep a short
+                # real interval the virtual deadline math escalates around.
+                cfg.pop("step_s", None)
+                cfg.pop("jitter_s", None)
+                cfg.pop("durations", None)
+                cfg["fault_dir"] = fault_dir
+                if cfg.pop("straggle_s", None) is not None:
+                    cfg.setdefault("straggle_wall_s", 3.0)
             runner.add_trial(Trial(
-                cfg, trainable_name="SimTrainable",
+                cfg, trainable_name=trainable_name,
                 resources=Resources(cpu=1.0,
                                     devices=int(cfg.get("devices_req", 1))),
                 stopping_criteria={"training_iteration": scenario.stop_iteration},
                 trial_id=f"{token}-{i:05d}",
             ))
+        if fleet is not None:
+            fleet.start()
         try:
             trials = runner.run(max_steps=max_steps)
         except BaseException:
@@ -210,13 +284,17 @@ def run_scenario(
             except Exception:
                 pass
             raise
+        finally:
+            if fleet is not None:
+                fleet.stop()
     if journal is not None:
         journal.close()
     reset_faults(token)
     return ScenarioResult(
         scenario=scenario, trials=trials, runner=runner, executor=ex,
-        pool=pool, clock=clock, recorder=recorder, flightrec=flightrec,
-        wall_elapsed_s=_wall.monotonic() - t0)
+        pool=None if executor == "cluster" else pool, clock=clock,
+        recorder=recorder, flightrec=flightrec,
+        wall_elapsed_s=_wall.monotonic() - t0, fleet=fleet)
 
 
 # -- scenario generators ---------------------------------------------------------------

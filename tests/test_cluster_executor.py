@@ -1,0 +1,265 @@
+"""ClusterMeshExecutor on the localhost socket tier: FIFO result-stream
+equality against the process tier, cross-host checkpoint recovery, framing
+corruption escalating to host eviction (with the pump surviving), and the
+placement policies (DESIGN.md §11)."""
+import os
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.cluster import (ClusterMeshExecutor, FixedPlacement, HostSpec,
+                           RooflinePlacement, parse_hosts)
+from repro.cluster.hosts import HostAgent, fetch
+from repro.cluster.placement import estimate_step_s, workload_cost
+from repro.cluster.transport import client_handshake
+from repro.core import (CheckpointManager, EventType, ObjectStore, Resources,
+                        TrainableFactory, Trial, TrialStatus,
+                        register_worker_factory, run_experiments, grid_search)
+from repro.core.clock import WallClock
+from repro.core.object_store import ObjectStore as _Store
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def factory(name: str) -> TrainableFactory:
+    return TrainableFactory(target=f"_worker_trainables:{name}",
+                            sys_path=(TESTS_DIR,))
+
+
+def make_executor(name: str, hosts="2x4", **kw):
+    kw.setdefault("placement", "fixed")
+    return ClusterMeshExecutor(
+        factory_resolver=lambda _n: factory(name),
+        checkpoint_manager=CheckpointManager(ObjectStore()),
+        hosts=hosts, checkpoint_freq=kw.pop("checkpoint_freq", 1), **kw)
+
+
+# -- roster parsing --------------------------------------------------------------------
+
+class TestParseHosts:
+    def test_formats(self):
+        assert [(s.name, s.devices) for s in parse_hosts(3)] == [
+            ("h0", 8), ("h1", 8), ("h2", 8)]
+        assert [(s.name, s.devices) for s in parse_hosts("2x4")] == [
+            ("h0", 4), ("h1", 4)]
+        assert [(s.name, s.devices) for s in parse_hosts("a:2,b:6")] == [
+            ("a", 2), ("b", 6)]
+        specs = parse_hosts([HostSpec("x", devices=1), ("y", 3)])
+        assert [(s.name, s.devices) for s in specs] == [("x", 1), ("y", 3)]
+
+    def test_rejects_duplicates_and_empty(self):
+        with pytest.raises(ValueError):
+            parse_hosts("a:2,a:4")
+        with pytest.raises(ValueError):
+            parse_hosts([])
+
+
+# -- placement cost model --------------------------------------------------------------
+
+def _trial(config=None, devices=1):
+    return Trial(config or {}, trainable_name="T",
+                 resources=Resources(cpu=1.0, devices=devices),
+                 stopping_criteria={"training_iteration": 1})
+
+
+class TestPlacement:
+    def test_collective_term_grows_with_width(self):
+        spec = HostSpec("h", devices=8)
+        cost = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 1e9}
+        assert estimate_step_s(cost, spec, 1) == 0.0  # no ring of one
+        assert (estimate_step_s(cost, spec, 8)
+                > estimate_step_s(cost, spec, 2) > 0.0)
+
+    def test_roofline_right_sizes_instead_of_max_width(self):
+        """Collective-bound workload: the model must pick a NARROW slice
+        even though 8 devices are free."""
+        hosts = [HostAgent(HostSpec("h0", devices=8), WallClock())]
+        pol = RooflinePlacement(devices_per_trial=8)
+        t = _trial({"_cost": {"flops": 1e9, "bytes": 0.0, "coll_bytes": 1e12}},
+                   devices=8)
+        choice = pol.place(t, hosts)
+        assert choice is not None
+        host, width = choice
+        assert width < 8, ("collective-bound trial was given the full host; "
+                           "right-sizing is not happening")
+
+    def test_roofline_compute_bound_goes_wide(self):
+        hosts = [HostAgent(HostSpec("h0", devices=8), WallClock())]
+        pol = RooflinePlacement(devices_per_trial=1)
+        t = _trial({"_cost": {"flops": 1e18, "bytes": 0.0, "coll_bytes": 0.0}},
+                   devices=1)
+        _, width = pol.place(t, hosts)
+        assert width == 8, "compute-bound trial should take the widest slice"
+
+    def test_unprofiled_falls_back_to_fixed(self):
+        hosts = [HostAgent(HostSpec("h0", devices=8), WallClock())]
+        pol = RooflinePlacement(devices_per_trial=2)
+        t = _trial(devices=4)
+        assert workload_cost(t) is None
+        _, width = pol.place(t, hosts)
+        assert width == 2  # devices_per_trial override, not the request
+
+    def test_profile_denormalizes_to_cost(self):
+        t = _trial()
+        t.profile = {"roofline_compute_s": 1.0, "roofline_memory_s": 0.5,
+                     "roofline_collective_s": 0.0, "dominant": "compute"}
+        cost = workload_cost(t)
+        assert cost is not None and cost["flops"] > 0 and cost["bytes"] > 0
+
+    def test_fixed_prefers_most_free_alive_host(self):
+        clock = WallClock()
+        a = HostAgent(HostSpec("a", devices=8), clock)
+        b = HostAgent(HostSpec("b", devices=8), clock)
+        a.pool.acquire(6)
+        choice = FixedPlacement().place(_trial(devices=2), [a, b])
+        assert choice is not None and choice[0] is b
+        b.alive = False
+        choice = FixedPlacement().place(_trial(devices=2), [a, b])
+        assert choice is not None and choice[0] is a
+
+
+# -- cross-host checkpoint fetch -------------------------------------------------------
+
+class TestFetch:
+    def test_cas_digest_verified(self, tmp_path):
+        import hashlib
+        src = _Store(spill_dir=str(tmp_path / "src"))
+        dst = _Store(spill_dir=str(tmp_path / "dst"))
+        data = b"checkpoint-bytes"
+        key = f"cas/t0/{hashlib.sha256(data).hexdigest()}"
+        src.put_spilled(data, key=key)
+        fetch(key, src, dst)
+        assert dst.peek(key) == data
+        # Corrupt payload under a digest key must be refused.
+        bad_key = f"cas/t0/{hashlib.sha256(b'other').hexdigest()}"
+        src.put_spilled(data, key=bad_key)
+        with pytest.raises(IOError):
+            fetch(bad_key, src, dst)
+
+    def test_missing_key_raises(self, tmp_path):
+        src = _Store(spill_dir=str(tmp_path / "a"))
+        dst = _Store(spill_dir=str(tmp_path / "b"))
+        with pytest.raises(KeyError):
+            fetch("cas/t0/nope", src, dst)
+
+
+# -- socket tier end-to-end ------------------------------------------------------------
+
+@pytest.mark.timeout(600)
+class TestSocketTier:
+    def test_fifo_stream_equality_vs_process_tier(self):
+        """Acceptance criterion: a 2-host localhost-socket sweep reproduces
+        the process tier's statuses, result streams and losses exactly."""
+        from _worker_trainables import LrCounter
+        register_worker_factory("LrCounter", factory("LrCounter"))
+
+        def sweep(executor, **kw):
+            an = run_experiments(
+                LrCounter, {"lr": grid_search([0.001, 0.005, 0.02, 0.08])},
+                stop={"training_iteration": 5}, checkpoint_freq=1,
+                executor=executor, seed=0, total_devices=8, **kw)
+            return {
+                t.config["lr"]: (t.status.value,
+                                 [r.training_iteration for r in t.results],
+                                 [r.metrics["loss"] for r in t.results])
+                for t in an.trials}
+
+        ref = sweep("process")
+        got = sweep("cluster", hosts="2x4", placement="fixed")
+        assert got == ref
+
+    def test_crash_restart_restores_across_hosts(self, tmp_path):
+        """A crashed trial's checkpoint was fetched to the controller before
+        adoption, so the restart restores wherever placement lands it."""
+        from _worker_trainables import CrashOnce
+        register_worker_factory("CrashOnce", factory("CrashOnce"))
+        an = run_experiments(
+            CrashOnce, {"marker_dir": str(tmp_path), "fail_at": 3},
+            stop={"training_iteration": 6}, checkpoint_freq=1,
+            executor="cluster", hosts="2x4", placement="fixed",
+            max_failures=2, seed=0)
+        (t,) = an.trials
+        assert t.status == TrialStatus.TERMINATED
+        assert t.num_failures == 1
+        ns = [round(1.0 / r.metrics["loss"]) for r in t.results]
+        assert ns == [1, 2, 3, 4, 5, 6], (
+            f"stream reset instead of restoring from checkpoint: {ns}")
+
+    def test_framing_corruption_evicts_host_pump_survives(self):
+        """A stranger dialing back with the victim's trial_id and spewing a
+        corrupt frame must evict that host — and the pump must keep serving
+        the other host's trials afterwards."""
+        ex = make_executor("Sleeper", hosts="2x2", heartbeat_timeout=0.0)
+        victim = Trial({"sleep_s": 0.2}, trainable_name="Sleeper",
+                       resources=Resources(cpu=1.0, devices=1),
+                       stopping_criteria={"training_iteration": 50},
+                       trial_id="victim")
+        try:
+            assert ex.start_trial(victim)
+            deadline = time.time() + 60
+            while time.time() < deadline:
+                if ex.get_next_event(timeout=1.0) is not None:
+                    break  # worker is up and talking
+            victim_host = ex._host_of["victim"].name
+            # Reconnect-attach as the victim, then send garbage.
+            sock = socket.create_connection(ex._listener.address, timeout=10)
+            tr = client_handshake(
+                sock, {"trial_id": "victim", "pid": 0, "token": ex._token})
+            junk = b"this is not a pickle"
+            tr.sock.sendall(struct.pack("!I", len(junk)) + junk)
+            deadline = time.time() + 60
+            while time.time() < deadline and ex.n_host_evictions == 0:
+                ex.get_next_event(timeout=0.5)
+            assert ex.n_host_evictions == 1
+            assert not ex.hosts[victim_host].alive
+            assert "corrupt" in (ex.hosts[victim_host].evicted_reason or "")
+            tr.close()
+
+            # The pump is not wedged: a fresh trial on the surviving host
+            # still runs to completion.
+            pump_alive = any(t.name == "repro-proc-pump" and t.is_alive()
+                             for t in threading.enumerate())
+            assert pump_alive, "pump thread died on the corrupt frame"
+            after = Trial({"sleep_s": 0.01}, trainable_name="Sleeper",
+                          resources=Resources(cpu=1.0, devices=1),
+                          stopping_criteria={"training_iteration": 1},
+                          trial_id="after")
+            assert ex.start_trial(after)
+            seen = set()
+            deadline = time.time() + 60
+            while time.time() < deadline and EventType.RESULT not in seen:
+                ev = ex.get_next_event(timeout=1.0)
+                if ev is not None and ev.trial_id == "after":
+                    seen.add(ev.type)
+            assert EventType.RESULT in seen, (
+                "surviving host's trial produced nothing — pump wedged")
+        finally:
+            ex.shutdown()
+
+    def test_host_state_and_listener_rejects_bad_token(self):
+        ex = make_executor("Counter", hosts="2x2", heartbeat_timeout=0.0)
+        try:
+            state = ex.host_state()
+            assert sorted(state) == ["h0", "h1"]
+            assert all(s["alive"] and s["free"] == 2 for s in state.values())
+            # A dialer with the wrong roster token is turned away: the
+            # handshake acks (the token rides the hello, checked after), then
+            # the listener hangs up without attaching.
+            sock = socket.create_connection(ex._listener.address, timeout=10)
+            sock.settimeout(10)
+            tr = client_handshake(
+                sock, {"trial_id": "x", "pid": 0, "token": "wrong"},
+                timeout=10.0)
+            tr.sock.settimeout(10.0)
+            with pytest.raises(EOFError):
+                tr.recv()
+            tr.close()
+            deadline = time.time() + 10
+            while time.time() < deadline and ex._listener.n_rejected == 0:
+                time.sleep(0.05)
+            assert ex._listener.n_rejected == 1
+        finally:
+            ex.shutdown()

@@ -1,0 +1,160 @@
+"""Satellite 1: the scenario matrix reaches the *process* tier.
+
+``SimWorkerTrainable`` runs the scenario DSL's fault vocabulary inside real
+spawned worker processes — crashes are raises, kills are ``os._exit``, and
+stragglers sleep real wall seconds while the controller's deadline math
+rides the injected clock (the virtual-deadline contract from PR 5)."""
+import os
+
+import pytest
+
+from repro.core import (CheckpointManager, EventType, FIFOScheduler,
+                        ObjectStore, Resources, Trial, TrialStatus)
+from repro.core.clock import VirtualClock
+from repro.core.process_executor import ProcessMeshExecutor
+from repro.core.workers import TrainableFactory
+from repro.testing import Scenario, run_scenario
+from repro.testing.invariants import check_all
+from repro.testing.simworker import SimWorkerTrainable, _fire
+
+
+def _fifo():
+    return FIFOScheduler(metric="loss", mode="min")
+
+
+class TestFireMarkers:
+    def test_fire_consumes_exactly_limit_across_incarnations(self, tmp_path):
+        d = str(tmp_path)
+        assert _fire(d, "s0", "crash", 2)       # incarnation 1
+        assert _fire(d, "s0", "crash", 2)       # incarnation 2
+        assert not _fire(d, "s0", "crash", 2)   # budget durably spent
+        assert not _fire(d, "s0", "crash", 0)   # limit 0 never fires
+        assert not _fire("", "s0", "crash", 5)  # no dir -> no faults
+        assert sorted(os.listdir(d)) == ["s0.crash.0", "s0.crash.1"]
+
+    def test_fire_sites_are_independent(self, tmp_path):
+        d = str(tmp_path)
+        assert _fire(d, "s0", "crash", 1)
+        assert _fire(d, "s0", "kill", 1)        # different site, own budget
+        assert _fire(d, "s1", "crash", 1)       # different trial, own budget
+        assert not _fire(d, "s0", "crash", 1)
+
+
+@pytest.mark.timeout(600)
+class TestProcessTierScenarios:
+    def test_fault_storm_in_real_processes(self):
+        """The pscen acceptance run: 8 trials, one mid-run raise, one real
+        ``os._exit`` kill, one double-crash that exhausts max_failures=1 —
+        all faults reconcile through check_all."""
+        cfgs = []
+        crashes = fatal = 0
+        for i in range(8):
+            cfg = {"lr": 0.01 + i * 0.001}
+            if i == 2:
+                cfg["crash_at"] = 2
+                crashes += 1
+            if i == 5:
+                cfg["kill_at"] = 3
+                crashes += 1
+            if i == 7:
+                cfg["crash_at"] = 1
+                cfg["crash_count"] = 2
+                crashes += 2
+                fatal += 1
+            cfgs.append(cfg)
+        sc = Scenario(name="pstorm", configs=cfgs, stop_iteration=4,
+                      max_failures=1, heartbeat_timeout=60.0,
+                      expected_crashes=crashes, expected_fatal=fatal)
+        res = run_scenario(sc, _fifo, executor="process", pool_devices=8)
+        check_all(res)
+        by = res.by_status()
+        assert by == {"TERMINATED": 7, "ERROR": 1}, by
+        # crash@2, kill@3, and the double-crasher's FIRST crash all restart.
+        assert res.runner.n_restarts == 3
+        assert res.runner.n_errors == 1
+        # The killed/crashed trials RESUMED (gapless streams already checked
+        # by check_all; the ERROR trial is the double-crasher).
+        (err,) = [t for t in res.trials if t.status == TrialStatus.ERROR]
+        assert err.config.get("crash_count") == 2
+
+    def test_virtual_deadline_kills_real_straggler(self, tmp_path):
+        """A child stuck in a *real* sleep is reaped by a five-minute
+        straggler deadline that elapses in virtual milliseconds: deadline
+        arithmetic reads the injected clock, never the child's wall."""
+        clock = VirtualClock()
+        factory = TrainableFactory(
+            target="repro.testing.simworker:SimWorkerTrainable")
+        ex = ProcessMeshExecutor(
+            factory_resolver=lambda _n: factory,
+            checkpoint_manager=CheckpointManager(ObjectStore()),
+            clock=clock, heartbeat_timeout=0.0, straggler_deadline=300.0,
+            spawn_timeout=0, checkpoint_freq=1)
+        # Stall on the FIRST step: that one is credited by READY's initial
+        # grant, so no runner is needed to put the worker in_step.
+        trial = Trial({"sim_id": "strag", "fault_dir": str(tmp_path),
+                       "straggle_at": 1, "straggle_wall_s": 60.0},
+                      trainable_name="SimWorkerTrainable",
+                      resources=Resources(cpu=1.0, devices=1),
+                      stopping_criteria={"training_iteration": 5},
+                      trial_id="strag-0")
+        try:
+            assert ex.start_trial(trial)
+            seen = []
+            while not any(e.type == EventType.ERROR for e in seen):
+                ev = ex.get_next_event(timeout=30.0)  # 30 virtual s per call
+                if ev is not None:
+                    seen.append(ev)
+                assert clock.monotonic() < 100_000.0, (
+                    f"no ERROR after huge virtual wait; saw "
+                    f"{[e.type for e in seen]}")
+            kinds = [e.type for e in seen]
+            assert EventType.HEARTBEAT_MISSED not in kinds  # warnings off
+            assert EventType.KILLED in kinds, kinds
+            killed = next(e for e in seen if e.type == EventType.KILLED)
+            assert killed.info.get("stalled_s", 0) >= 300.0
+            assert clock.monotonic() >= 300.0   # the deadline truly elapsed
+            assert EventType.RESULT not in kinds  # it never finished a step
+        finally:
+            ex.shutdown()
+
+    def test_straggler_scenario_roundtrip(self):
+        """The DSL path: ``straggle_at`` in a process-tier scenario produces
+        HEARTBEAT_MISSED warnings that reconcile in check_all."""
+        cfgs = [{"lr": 0.01}, {"lr": 0.012, "straggle_at": 2}]
+        sc = Scenario(name="pstrag", configs=cfgs, stop_iteration=3,
+                      max_failures=1, heartbeat_timeout=0.5,
+                      expected_stragglers=1)
+        res = run_scenario(sc, _fifo, executor="process", pool_devices=4)
+        check_all(res)
+        assert res.by_status() == {"TERMINATED": 2}
+
+
+class TestSimWorkerTrainableUnit:
+    """In-process contract checks (no spawn): loss shape, save/restore,
+    reset_config — the parts every scheduler in the matrix leans on."""
+
+    def test_loss_and_checkpoint_roundtrip(self, tmp_path):
+        t = SimWorkerTrainable({"lr": 0.03, "sim_id": "u0",
+                                "fault_dir": str(tmp_path)})
+        r1 = t.step()
+        assert r1["loss"] == pytest.approx((0.03 - 0.01) ** 2 + 1.0)
+        state = t.save()
+        t.step()
+        t.restore(state)
+        assert t.step()["n"] == 2
+
+    def test_reset_config_moves_lr(self, tmp_path):
+        t = SimWorkerTrainable({"lr": 0.03, "sim_id": "u1",
+                                "fault_dir": str(tmp_path)})
+        assert t.reset_config({"lr": 0.01})
+        assert t.step()["loss"] == pytest.approx(1.0)
+
+    def test_crash_durably_consumed(self, tmp_path):
+        cfg = {"lr": 0.01, "sim_id": "u2", "fault_dir": str(tmp_path),
+               "crash_at": 1}
+        t = SimWorkerTrainable(cfg)
+        with pytest.raises(RuntimeError, match="injected crash"):
+            t.step()
+        # A rebuilt incarnation sees the marker and sails through.
+        t2 = SimWorkerTrainable(cfg)
+        assert t2.step()["n"] == 1

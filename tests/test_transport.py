@@ -1,0 +1,308 @@
+"""Cluster wire framing: handshake, heartbeats, fuzzed malformed input, and
+the wall-jump-safe age-math contract (DESIGN.md §11).
+
+The framing tests are adversarial by design: partial reads, oversized
+frames, corrupt length prefixes, truncated pickles and mid-frame
+disconnects must every one surface as a typed TransportError the pump can
+route to host eviction — never a wedge, never a silent misparse.
+"""
+import os
+import pickle
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.cluster.transport import (DEFAULT_MAX_FRAME, HEARTBEAT, MAGIC,
+                                     PROTO_VERSION, FramingError,
+                                     SocketTransport, TransportClosed,
+                                     TransportError, client_handshake,
+                                     server_handshake, virtual_pair)
+from repro.core.clock import VirtualClock, WallClock
+
+
+def pair():
+    """A connected (server_transport, client_socket) pair, handshake done."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    addr = srv.getsockname()[:2]
+    out = {}
+
+    def serve():
+        s, _ = srv.accept()
+        out["tr"], out["hello"] = server_handshake(s)
+
+    t = threading.Thread(target=serve)
+    t.start()
+    c = socket.create_connection(addr)
+    ctr = client_handshake(c, {"trial_id": "t0", "pid": 1, "token": "tok"})
+    t.join()
+    srv.close()
+    return out["tr"], ctr, out["hello"]
+
+
+class TestFraming:
+    def test_round_trip_and_hello(self):
+        tr, ctr, hello = pair()
+        assert hello == {"trial_id": "t0", "pid": 1, "token": "tok"}
+        ctr.send(("STEP", {"k": 1}))
+        assert tr.recv() == ("STEP", {"k": 1})
+        tr.send(("RESULT", [1, 2, 3]))
+        assert ctr.recv() == ("RESULT", [1, 2, 3])
+        tr.close()
+        ctr.close()
+
+    def test_heartbeat_is_zero_length_frame_and_returns_sentinel(self):
+        tr, ctr, _ = pair()
+        ctr.send_heartbeat()
+        # Must RETURN the sentinel, not swallow it and block for a next
+        # frame: a recv that loops would wedge the shared pump thread.
+        assert tr.recv() == HEARTBEAT
+        tr.close()
+        ctr.close()
+
+    def test_large_frame_round_trips(self):
+        tr, ctr, _ = pair()
+        blob = os.urandom(2_000_000)
+        ctr.send(("CKPT", blob))
+        kind, got = tr.recv()
+        assert kind == "CKPT" and got == blob
+        tr.close()
+        ctr.close()
+
+    def test_partial_reads_reassemble(self):
+        """A frame dribbled one byte at a time still parses (TCP gives no
+        message boundaries; _read_exact must loop)."""
+        tr, ctr, _ = pair()
+        payload = pickle.dumps(("STEP", {"x": list(range(100))}))
+        frame = struct.pack("!I", len(payload)) + payload
+        done = []
+
+        def dribble():
+            for i in range(len(frame)):
+                ctr.sock.sendall(frame[i:i + 1])
+                if i % 50 == 0:
+                    time.sleep(0.001)
+            done.append(True)
+
+        t = threading.Thread(target=dribble)
+        t.start()
+        assert tr.recv() == ("STEP", {"x": list(range(100))})
+        t.join()
+        assert done
+        tr.close()
+        ctr.close()
+
+
+class TestMalformedInput:
+    """Every corruption class maps to a typed error, immediately."""
+
+    def test_oversized_frame_rejected_before_allocation(self):
+        tr, ctr, _ = pair()
+        ctr.sock.sendall(struct.pack("!I", DEFAULT_MAX_FRAME + 1))
+        with pytest.raises(FramingError, match="cap"):
+            tr.recv()
+        tr.close()
+        ctr.close()
+
+    def test_corrupt_length_prefix_garbage_payload(self):
+        """A plausible length followed by non-pickle bytes -> FramingError
+        (corrupt stream), not a crash and not a hang."""
+        tr, ctr, _ = pair()
+        junk = b"\x00\x01\x02not a pickle at all"
+        ctr.sock.sendall(struct.pack("!I", len(junk)) + junk)
+        with pytest.raises(FramingError):
+            tr.recv()
+        tr.close()
+        ctr.close()
+
+    def test_mid_frame_disconnect_is_transport_closed(self):
+        tr, ctr, _ = pair()
+        payload = pickle.dumps(("STEP",))
+        # Announce a full frame, deliver half, vanish.
+        ctr.sock.sendall(struct.pack("!I", len(payload)) + payload[: len(payload) // 2])
+        ctr.close()
+        with pytest.raises(TransportClosed, match="mid-frame"):
+            tr.recv()
+        tr.close()
+
+    def test_clean_disconnect_between_frames_is_transport_closed(self):
+        tr, ctr, _ = pair()
+        ctr.close()
+        with pytest.raises(TransportClosed):
+            tr.recv()
+        tr.close()
+
+    def test_error_taxonomy_matches_pump_except_clause(self):
+        """The base pump catches (EOFError, OSError); both cluster error
+        types must land in that net without the core importing cluster."""
+        assert issubclass(TransportClosed, EOFError)
+        assert issubclass(FramingError, OSError)
+        assert issubclass(TransportClosed, TransportError)
+        assert issubclass(FramingError, TransportError)
+
+    @pytest.mark.parametrize("greeting", [
+        b"HTTP/1.1 GET /",                      # wrong protocol entirely
+        b"XXXX" + bytes([PROTO_VERSION]),       # bad magic
+        MAGIC + bytes([PROTO_VERSION + 1]),     # version skew
+    ])
+    def test_handshake_rejects_bad_greeting(self, greeting):
+        srv = socket.create_server(("127.0.0.1", 0))
+        addr = srv.getsockname()[:2]
+        err = []
+
+        def serve():
+            s, _ = srv.accept()
+            try:
+                server_handshake(s, timeout=5.0)
+            except TransportError as e:
+                err.append(e)
+
+        t = threading.Thread(target=serve)
+        t.start()
+        c = socket.create_connection(addr)
+        c.sendall(greeting)
+        t.join()
+        assert err, "server accepted a bad greeting"
+        c.close()
+        srv.close()
+
+    def test_fuzz_random_prefixes_never_wedge(self):
+        """Random garbage streams: recv must raise a TransportError subclass
+        within the socket timeout, never hang and never raise anything the
+        pump wouldn't catch."""
+        import random
+        rng = random.Random(0)
+        for trial in range(8):
+            tr, ctr, _ = pair()
+            tr.sock.settimeout(5.0)
+            n = rng.randint(1, 64)
+            ctr.sock.sendall(bytes(rng.getrandbits(8) for _ in range(n)))
+            ctr.close()  # garbage then EOF
+            with pytest.raises((TransportError, OSError)):
+                while True:  # at most a few frames of garbage then EOF
+                    tr.recv()
+            tr.close()
+
+
+class TestWallJumpSafety:
+    """Satellite 2: heartbeat/reconnect age math must read clock.monotonic()
+    (never time.time()) — the PR 5 wall-jump-safe contract."""
+
+    class JumpyClock(WallClock):
+        """Wall clock whose epoch axis teleports hours on every read; the
+        monotonic axis stays honest.  Any age math that touches time()
+        becomes wildly wrong under it."""
+
+        def __init__(self):
+            super().__init__()
+            self._jump = 0.0
+
+        def time(self):
+            self._jump = -self._jump + (3600.0 if self._jump <= 0 else 0.0)
+            return super().time() + self._jump
+
+    def test_recv_stamp_rides_monotonic_not_wall(self):
+        clock = self.JumpyClock()
+        srv = socket.create_server(("127.0.0.1", 0))
+        addr = srv.getsockname()[:2]
+        out = {}
+
+        def serve():
+            s, _ = srv.accept()
+            out["tr"], _ = server_handshake(s, clock=clock)
+
+        t = threading.Thread(target=serve)
+        t.start()
+        c = socket.create_connection(addr)
+        ctr = client_handshake(c, {"trial_id": "t", "pid": 0, "token": ""})
+        t.join()
+        srv.close()
+        tr = out["tr"]
+        before = clock.monotonic()
+        ctr.send_heartbeat()
+        assert tr.recv() == HEARTBEAT
+        after = clock.monotonic()
+        # The stamp sits inside the monotonic window: a time()-based stamp
+        # would be off by +-1h.
+        assert before <= tr.last_recv_mono <= after
+        assert abs(tr.last_recv_mono - clock.monotonic()) < 60.0
+        tr.close()
+        ctr.close()
+
+    def test_host_age_math_survives_wall_jumps(self):
+        """A 2-host virtual-tier mini-run under the jumpy clock: heartbeat
+        ages stay sane, so no host is ever evicted and every trial finishes.
+        If any eviction path read time(), the +-1h teleports would blow the
+        1s host_timeout instantly."""
+        from repro.cluster import ClusterMeshExecutor
+        from repro.cluster.sim import SimFleet
+        from repro.core import (CheckpointManager, ObjectStore, Resources,
+                                Trial, TrialRunner, FIFOScheduler)
+        from repro.core.clock import use_clock
+        from repro.core.workers import TrainableFactory
+
+        clock = self.JumpyClock()
+        with use_clock(clock):
+            ex = ClusterMeshExecutor(
+                checkpoint_manager=CheckpointManager(ObjectStore()),
+                hosts="2x2", transport="virtual", placement="fixed",
+                heartbeat_timeout=0.2,  # -> 0.05s monitor cadence
+                host_timeout=1.0, spawn_timeout=0,
+                checkpoint_freq=1, clock=clock,
+                factory_resolver=lambda _n: TrainableFactory(
+                    target="repro.testing.sim:SimTrainable"))
+            fleet = SimFleet(ex, clock, heartbeat_interval=0.05)
+            runner = TrialRunner(
+                FIFOScheduler(metric="loss", mode="min"), ex,
+                trainable_name="SimTrainable",
+                stopping_criteria={"training_iteration": 3})
+            for i in range(3):
+                runner.add_trial(Trial(
+                    {"sim_id": f"j{i}", "sim_token": "jumpy",
+                     "step_s": 0.05},
+                    trainable_name="SimTrainable",
+                    resources=Resources(cpu=1.0, devices=1),
+                    stopping_criteria={"training_iteration": 3},
+                    trial_id=f"jumpy-{i}"))
+            fleet.start()
+            try:
+                trials = runner.run()
+            finally:
+                fleet.stop()
+        assert ex.n_host_evictions == 0, (
+            "wall-time jumps triggered a host eviction: some age math is "
+            "reading time() instead of monotonic()")
+        assert all(t.status.value == "TERMINATED" for t in trials)
+
+
+class TestVirtualTransport:
+    def test_round_trip_eof_and_partition(self):
+        clock = VirtualClock()
+        a, b = virtual_pair(clock, name="v")
+        a.send(("STEP",))
+        assert b.recv() == ("STEP",)
+        assert not b.poll(0)
+        a.close()
+        with pytest.raises(TransportClosed):
+            b.recv()
+
+    def test_partition_drops_silently_but_close_delivers(self):
+        clock = VirtualClock()
+        dropped = []
+        a, b = virtual_pair(clock, name="p",
+                            drop=lambda side, obj: dropped.append(obj) or True)
+        a.send(("RESULT", 1))
+        assert b._q.empty() and dropped == [("RESULT", 1)]
+        # A SIGKILL'd process's FIN still arrives through a partition.
+        a.close()
+        with pytest.raises(TransportClosed):
+            b.recv()
+
+    def test_send_after_peer_close_raises(self):
+        clock = VirtualClock()
+        a, b = virtual_pair(clock, name="c")
+        b.close()
+        with pytest.raises(TransportClosed):
+            a.send(("STEP",))
