@@ -29,6 +29,7 @@ be announced with ``kick()``.
 from __future__ import annotations
 
 import contextlib
+import math as _math
 import queue as _queue
 import threading
 import time as _time
@@ -55,6 +56,15 @@ class Clock:
 
     def sleep(self, seconds: float) -> None:
         raise NotImplementedError
+
+    def sleep_until(self, t: float) -> None:
+        """Park until the timestamp axis reaches ``t``.  The default delegates
+        to relative ``sleep``; VirtualClock overrides it to land on ``t``
+        *bit-exactly* — ``now + (t - now)`` re-associates the float sum, and
+        resume phase targets (DESIGN.md §12) cannot afford the ulp."""
+        delay = t - self.time()
+        if delay > 0:
+            self.sleep(delay)
 
     # -- blocking primitives ---------------------------------------------------------
     def event(self) -> Any:
@@ -328,7 +338,17 @@ class VirtualClock(Clock):
                 f"parked={len(self._waiting)}, now={self._now:.3f})")
         nxt = min(deadlines)
         if nxt > self._now:
-            self._now = nxt
+            # Quantize the advance to the timestamp axis: pick the smallest
+            # ``now' >= nxt`` for which ``epoch + now'`` is exactly
+            # representable.  Timestamps (``time()``) then round-trip losslessly
+            # through journals, so a resumed run re-entering the timeline via
+            # ``sleep_until(journaled_t)`` lands on the *bit-identical* clock
+            # state the original process had (DESIGN.md §12).
+            tq = self._epoch + nxt
+            q = tq - self._epoch  # exact: Sterbenz (operands within 2x)
+            if q < nxt:
+                q = _math.nextafter(tq, _math.inf) - self._epoch
+            self._now = q
             self.n_advances += 1
         for ident, waiter in self._waiting.items():
             if waiter.deadline is not None and waiter.deadline <= self._now:
@@ -366,6 +386,24 @@ class VirtualClock(Clock):
 
     def sleep(self, seconds: float) -> None:
         self.wait_for(None, timeout=max(0.0, seconds))
+
+    def sleep_until(self, t: float) -> None:
+        # A pure sleep whose deadline is the absolute target itself, not
+        # now + delta: the advance then sets _now to exactly t - epoch.
+        me = threading.get_ident()
+        with self._lock:
+            cv = self._park_cv(me)
+            deadline = t - self._epoch
+            while self._now < deadline:
+                waiter = _Waiter(cv, deadline, None, True)
+                self._waiting[me] = waiter
+                try:
+                    self._maybe_advance()
+                    if waiter.woken:
+                        continue
+                    cv.wait()
+                finally:
+                    self._waiting.pop(me, None)
 
     # -- blocking primitives -----------------------------------------------------------
     def event(self) -> _VirtualEvent:

@@ -138,6 +138,16 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
         # Timestamps come from the shared clock — deterministic under virtual
         # time.  With tracing off this adds one attribute test per step.
         traced = self.obs.tracer.enabled
+        # Durable resume (DESIGN.md §12): a restored trial carries the virtual
+        # timestamp it had reached when the original controller died.  Sleep
+        # the clock to that point before the first step so every subsequent
+        # result lands at the same virtual time — and hence in the same
+        # cross-trial arrival order — as in the uninterrupted run.  One-shot:
+        # consumed here so respawns (resize, exploit) never re-apply it.
+        phase_t = ws.trial.resume_phase_t
+        if phase_t is not None:
+            ws.trial.resume_phase_t = None
+            self.clock.sleep_until(phase_t)
         while True:
             # Acquire one step credit; the runner grants them on CONTINUE
             # (and _halt releases one after setting stop, so a halted worker
@@ -193,7 +203,8 @@ class ConcurrentMeshExecutor(BusDrivenExecutor):
                                       self.clock.time() - t_ck, "ckpt", "host",
                                       {"iteration": ws.trainable.iteration}))
                     self.bus.publish(TrialEvent(
-                        EventType.CHECKPOINTED, trial_id, checkpoint=ckpt))
+                        EventType.CHECKPOINTED, trial_id, checkpoint=ckpt,
+                        info={"iteration": ws.trainable.iteration}))
                 except NotImplementedError:
                     pass
                 except Exception:  # noqa: BLE001 — checkpoint failure kills the trial

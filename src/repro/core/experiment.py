@@ -14,7 +14,9 @@ from __future__ import annotations
 
 import inspect
 import os
+import re
 import tempfile
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from .api import Trainable, wrap_function
@@ -57,11 +59,21 @@ class _StatePersister(Logger):
     comes from checkpoints + this periodic metadata snapshot.  On restart,
     ``run_experiments(..., resume=True)`` rebuilds the trial list: finished
     trials keep their results, interrupted ones restart from their last disk
-    checkpoint (or from scratch if none was written)."""
+    checkpoint (or from scratch if none was written).
 
-    def __init__(self, path: str, runner_ref):
+    Dumps fire on trial completion and experiment end, and — clock-throttled —
+    on fault-recovery events (RESTARTED / KILLED / ERROR) plus the first
+    result of the run, so a controller killed early or mid-fault-storm still
+    leaves a usable pkl behind (DESIGN.md §12)."""
+
+    def __init__(self, path: str, runner_ref, clock=None,
+                 min_interval_s: float = 5.0):
         self.path = path
         self.runner_ref = runner_ref
+        self.clock = clock
+        self.min_interval_s = min_interval_s
+        self._last_dump: Optional[float] = None
+        self._saw_result = False
 
     def _dump(self) -> None:
         import pickle
@@ -73,6 +85,24 @@ class _StatePersister(Logger):
         with open(tmp, "wb") as f:
             pickle.dump(runner.trials, f)
         os.replace(tmp, self.path)
+        if self.clock is not None:
+            self._last_dump = self.clock.time()
+
+    def _throttled_dump(self) -> None:
+        if (self.clock is not None and self._last_dump is not None
+                and self.clock.time() - self._last_dump < self.min_interval_s):
+            return
+        self._dump()
+
+    def on_result(self, trial, result) -> None:
+        if not self._saw_result:
+            self._saw_result = True
+            self._throttled_dump()
+
+    def on_event(self, trial, event) -> None:
+        kind = getattr(getattr(event, "type", None), "value", None)
+        if kind in ("RESTARTED", "KILLED", "ERROR"):
+            self._throttled_dump()
 
     def on_trial_complete(self, trial) -> None:
         self._dump()
@@ -100,6 +130,57 @@ def load_experiment_state(log_dir: str) -> List[Trial]:
                 t.results.clear()
                 t.checkpoint = None
     return trials
+
+
+def _infer_initial_id_offset(journal_path: str, name: str) -> int:
+    """The original process's Trial auto-id counter need not have started at
+    zero (other trials may have been created first): recover the offset from
+    the smallest ``{name}_{NNNNN}`` suffix the journal recorded."""
+    import json
+    pat = re.compile(rf"^{re.escape(name)}_(\d+)$")
+    best: Optional[int] = None
+    try:
+        with open(journal_path) as f:
+            for line in f:
+                try:
+                    obj = json.loads(line)
+                except (ValueError, TypeError):
+                    continue
+                tid = obj.get("trial_id") if isinstance(obj, dict) else None
+                if isinstance(tid, str):
+                    m = pat.match(tid)
+                    if m:
+                        v = int(m.group(1))
+                        if best is None or v < best:
+                            best = v
+    except OSError:
+        return 0
+    return best or 0
+
+
+def _resume_base_trials(log_dir: str, journal_path: str, name: str,
+                        space_variants: Optional[List[Dict[str, Any]]],
+                        resources: Resources,
+                        stop: Optional[Dict[str, float]]) -> List[Trial]:
+    """Identity source for the resumed run's *initial* trial set: the legacy
+    pkl when one survives (authoritative ids + configs), else the space
+    regenerated with the original id offset, else nothing (journal-only —
+    configs then come from result records)."""
+    import pickle
+    pkl = os.path.join(log_dir, "experiment_state.pkl")
+    if os.path.exists(pkl):
+        try:
+            with open(pkl, "rb") as f:
+                return pickle.load(f)
+        except Exception:
+            pass  # torn by the crash: fall through to regeneration
+    if space_variants is not None:
+        offset = _infer_initial_id_offset(journal_path, name)
+        return [Trial(config=config, trainable_name=name, resources=resources,
+                      stopping_criteria=stop, tag=format_variant_tag(config),
+                      trial_id=f"{name}_{offset + i:05d}")
+                for i, config in enumerate(space_variants)]
+    return []
 
 
 class ExperimentAnalysis:
@@ -176,6 +257,7 @@ def run_experiments(
     clock: Optional[Any] = None,  # repro.core.clock.Clock; None = default
     trace: Union[None, bool, str] = None,   # Chrome trace-event JSON path
     metrics_interval: float = 0.0,          # >0 = JSONL metrics snapshots
+    search_state_interval: float = 10.0,    # search_state.json snapshot throttle
     obs: Optional[Any] = None,              # pre-built repro.obs.Observability
     report: Union[None, bool, str] = None,  # HTML run report (needs log_dir)
     live_table: bool = False,               # LiveReporter trial table
@@ -206,9 +288,23 @@ def run_experiments(
     stop/pause/perturb trials (``Scheduler.decision_interval() != 0``), so
     scheduler decisions stay serial-exact.
 
-    ``resume=True`` (requires ``log_dir``) restores the trial list of an
-    interrupted run from ``log_dir/experiment_state.pkl``: finished trials are
-    kept, interrupted ones continue from their last durable checkpoint.
+    ``resume=True`` (requires ``log_dir``) rebuilds an interrupted — even
+    kill -9'd — run from its durable artifacts (DESIGN.md §12): trial
+    statuses, iteration counts and metric histories replay from
+    ``log_dir/events.jsonl``; scheduler and searcher state load from the
+    watermarked ``log_dir/search_state.json`` snapshot (the journal tail
+    past the watermark is replayed through them); weights restore from the
+    per-trial checkpoint mirrors under ``log_dir/ckpt``.  Finished trials
+    are kept; a trial with a valid mirror continues from that iteration; a
+    trial with none restarts from scratch with its failure counters intact.
+    The journal is appended to, not truncated, so a resumed run's decision
+    stream continues the original one.  Runs from before the journal era
+    fall back to the legacy ``experiment_state.pkl`` path.  ``space=`` is
+    only used to regenerate the original trial identities — changing it
+    between runs is ignored (and warned about); a changed ``num_samples``
+    that conflicts with the restored trial count raises.
+    ``search_state_interval`` throttles the search-state snapshots (seconds
+    on the injected clock, default 10, independent of ``metrics_interval``).
 
     ``clock`` injects the time source (DESIGN.md §7) into the executor, the
     event bus, the loggers and the broker in one stroke — a ``VirtualClock``
@@ -323,15 +419,64 @@ def run_experiments(
                 f"(VmapExecutor needs a VectorTrainableSpec)")
     exec_kind = (executor if isinstance(executor, str)
                  else type(executor).__name__)
+
+    # -- durable resume (DESIGN.md §12): plan BEFORE the journal reopens ----------
+    plan = None
+    restored: List[Trial] = []
+    if resume:
+        if not log_dir:
+            raise ValueError("resume=True requires log_dir")
+        if space is not None:
+            warnings.warn(
+                "resume=True restores the original run's trials from its "
+                "journal; `space=` is only used to regenerate their identity "
+                "— any changes to its values are IGNORED on resume",
+                UserWarning, stacklevel=2)
+        journal_path = os.path.join(log_dir, "events.jsonl")
+        if os.path.exists(journal_path):
+            from .resume import prepare_resume
+            space_variants = (list(generate_variants(
+                space, num_samples=num_samples, seed=seed))
+                if space is not None else None)
+            base = _resume_base_trials(
+                log_dir, journal_path, name, space_variants,
+                resources_per_trial or Resources(), stop)
+            plan = prepare_resume(
+                journal_path,
+                os.path.join(log_dir, "search_state.json"),
+                scheduler, searcher=searcher, base_trials=base,
+                checkpoint_dir=os.path.join(log_dir, "ckpt"),
+                trainable_name=name,
+                default_resources=resources_per_trial or Resources(),
+                stopping_criteria=stop)
+            if space_variants is not None:
+                sugg = re.compile(rf"^{re.escape(name)}_sugg_\d+$")
+                n_initial = sum(1 for t in plan.trials
+                                if not sugg.match(t.trial_id))
+                if n_initial != len(space_variants):
+                    raise ValueError(
+                        f"resume=True: the restored run has {n_initial} "
+                        f"initial trials but space/num_samples would generate "
+                        f"{len(space_variants)}; refusing to mix — resume "
+                        f"with the original space and num_samples, or start "
+                        f"a fresh log_dir")
+        else:
+            # Pre-journal run: experiment_state.pkl is all there is.
+            restored = load_experiment_state(log_dir)
+
     loggers: List[Logger] = [ConsoleLogger(verbose=verbose, clock=clock,
                                            obs=obs if obs.active else None)]
     if live_table:
         loggers.append(LiveReporter(metric=metric, clock=clock))
+    jsonl_logger: Optional[JSONLLogger] = None
     if log_dir:
         loggers.append(CSVLogger(os.path.join(log_dir, "csv")))
-        loggers.append(JSONLLogger(os.path.join(log_dir, "events.jsonl"),
-                                   clock=clock, executor=exec_kind,
-                                   decisions=decisions is not False))
+        jsonl_logger = JSONLLogger(
+            os.path.join(log_dir, "events.jsonl"), clock=clock,
+            executor=exec_kind, decisions=decisions is not False,
+            resumed=plan is not None,
+            initial_records=plan.n_journal_records if plan is not None else 0)
+        loggers.append(jsonl_logger)
     logger = CompositeLogger(loggers)
 
     # -- crash forensics + searcher-state checkpoints (DESIGN.md §10) -------------
@@ -353,9 +498,14 @@ def run_experiments(
                 break
     snapshotter = None
     if log_dir:
+        # Watermarked on the journal's record count: a snapshot taken at
+        # watermark W reflects exactly journal records [0..W), which is what
+        # lets resume replay only the tail (DESIGN.md §12).
         snapshotter = SearchStateSnapshotter(
             os.path.join(log_dir, "search_state.json"), clock=clock,
-            interval_s=metrics_interval if metrics_interval > 0 else 10.0)
+            interval_s=search_state_interval,
+            watermark_fn=((lambda: jsonl_logger.n_records)
+                          if jsonl_logger is not None else None))
 
     broker = None
     if (elastic not in (None, "off")) or lookahead != 1:
@@ -382,18 +532,21 @@ def run_experiments(
     if log_dir:
         import weakref
         loggers.append(_StatePersister(
-            os.path.join(log_dir, "experiment_state.pkl"), weakref.ref(runner)))
+            os.path.join(log_dir, "experiment_state.pkl"), weakref.ref(runner),
+            clock=clock))
 
     # -- initial trials ---------------------------------------------------------------
-    restored: List[Trial] = []
-    if resume:
-        if not log_dir:
-            raise ValueError("resume=True requires log_dir")
-        restored = load_experiment_state(log_dir)
+    if plan is not None:
+        runner.apply_resume_plan(plan)
+        for w in plan.warnings:
+            warnings.warn(f"resume: {w}", UserWarning, stacklevel=2)
+        if verbose:
+            print(f"[repro] {plan.summary()}")
+    elif restored:
         for trial in restored:
             trial.trainable_name = name  # rebind to this process's registration
             runner.add_trial(trial)
-    if restored:
+    if plan is not None or restored:
         pass  # resumed experiments keep their original trial set
     elif space is not None:
         for config in generate_variants(space, num_samples=num_samples, seed=seed):

@@ -330,13 +330,20 @@ class JSONLLogger(Logger):
 
     def __init__(self, path: str, clock: Optional[Clock] = None,
                  run_id: Optional[str] = None, executor: Optional[str] = None,
-                 decisions: bool = True):
+                 decisions: bool = True, resumed: bool = False,
+                 initial_records: int = 0):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.clock = clock or get_default_clock()
         t0 = self.clock.time()
         self.run_id = run_id or f"run-{int(t0)}-{os.getpid()}"
-        self.f = open(path, "w")
-        self.f.write(json.dumps({
+        # ``n_records`` counts data records (the run_header excluded): it is
+        # the watermark the SearchStateSnapshotter stamps into snapshots so
+        # resume knows exactly which journal prefix the saved search state
+        # has already been fed.  A resumed run appends to the existing
+        # journal and starts the counter at the surviving record count.
+        self.n_records = int(initial_records)
+        self.f = open(path, "a" if resumed else "w")
+        header = {
             "event": "run_header",
             "schema_version": self.SCHEMA_VERSION,
             "run_id": self.run_id,
@@ -344,10 +351,16 @@ class JSONLLogger(Logger):
             "executor": executor,
             "decisions": bool(decisions),
             "t": t0,
-        }) + "\n")
+        }
+        if resumed:
+            # Readers keep the first header and skip later ones, so a
+            # resumed journal parses as one continuous run.
+            header["resumed"] = True
+        self.f.write(json.dumps(header) + "\n")
         self.f.flush()
 
     def on_result(self, trial: Trial, result: Result) -> None:
+        self.n_records += 1
         self.f.write(json.dumps({
             "event": "result",
             "trial_id": trial.trial_id,
@@ -368,6 +381,7 @@ class JSONLLogger(Logger):
         ts = getattr(event, "timestamp", None)
         if ts is None:
             ts = self.clock.time()
+        self.n_records += 1
         self.f.write(json.dumps({
             "event": getattr(kind, "value", str(kind)).lower(),
             "trial_id": trial.trial_id,
@@ -378,6 +392,7 @@ class JSONLLogger(Logger):
         self.f.flush()
 
     def on_trial_complete(self, trial: Trial) -> None:
+        self.n_records += 1
         self.f.write(json.dumps({
             "event": "complete", "trial_id": trial.trial_id,
             "status": trial.status.value, "iterations": trial.training_iteration,

@@ -91,6 +91,18 @@ class TrialRunner:
         self._suggest_counter = itertools.count()
         self.n_errors = 0
         self.n_restarts = 0
+        # Durable resume (DESIGN.md §12), installed by apply_resume_plan:
+        # - result fences: re-executed iterations <= fence were already
+        #   journaled before the crash — drop them (re-opening the credit
+        #   gate) so the merged journal carries each result exactly once;
+        # - event fences: ditto for iteration-stamped non-result events
+        #   (CHECKPOINTED), keyed per event kind;
+        # - resume queue: restored trials launched (phase-ordered) ahead of
+        #   the scheduler's own choose loop so fresh PENDING trials cannot
+        #   steal their capacity.
+        self._resume_result_fence: Dict[str, int] = {}
+        self._resume_event_fence: Dict[str, Dict[str, int]] = {}
+        self._resume_queue: List[str] = []
         self.broker = broker
         if broker is not None:
             # Installs the effective lookahead on the executor (clamped to 1
@@ -106,6 +118,37 @@ class TrialRunner:
             self._n_finished += 1
         self._index_insert(trial)
         self.scheduler.on_trial_add(self, trial)
+
+    def adopt_trial(self, trial: Trial) -> None:
+        """Add a restored trial WITHOUT notifying the scheduler.
+
+        Durable resume rebuilds scheduler state from its snapshot / the
+        journal replay, which already reflects every ``on_trial_add`` of the
+        original run — re-firing the hook here would double-register the
+        trial (and burn scheduler RNG draws, e.g. ASHA's per-add bracket
+        choice), diverging every later verdict.
+        """
+        self.trials.append(trial)
+        self._by_id[trial.trial_id] = trial
+        trial._status_listener = self._on_status_change
+        if trial.status.is_finished():
+            self._n_finished += 1
+        self._index_insert(trial)
+
+    def apply_resume_plan(self, plan: Any) -> None:
+        """Install a ``repro.core.resume.ResumePlan``: adopt its trials and
+        arm the fences + phase-ordered relaunch queue (DESIGN.md §12)."""
+        for trial in plan.trials:
+            if trial.trial_id not in self._by_id:
+                self.adopt_trial(trial)
+        self._resume_result_fence = dict(plan.result_fences)
+        self._resume_event_fence = {
+            tid: dict(kinds) for tid, kinds in plan.event_fences.items()}
+        self._resume_queue = [
+            tid for tid in plan.resume_order
+            if not self.scheduler.holds_trial(tid)]
+        if plan.next_suggest_index:
+            self._suggest_counter = itertools.count(plan.next_suggest_index)
 
     # -- status index ------------------------------------------------------------
     def _index_insert(self, trial: Trial) -> None:
@@ -283,7 +326,45 @@ class TrialRunner:
         self._m_choose.observe((_perf() - p0) * 1e6)
         return trial
 
+    def _drain_resume_queue(self) -> None:
+        """Launch restored trials (phase order) before the scheduler's own
+        choose loop runs: the base ``choose_trial_to_run`` is PENDING-first,
+        so fresh never-started trials would otherwise steal the capacity the
+        restored trials held when the original controller died."""
+        tracer = self.obs.tracer
+        while self._resume_queue:
+            trial = self.get_trial(self._resume_queue[0])
+            if trial is None or trial.status not in (
+                    TrialStatus.PAUSED, TrialStatus.PENDING):
+                self._resume_queue.pop(0)
+                continue
+            if not self.executor.has_resources(trial):
+                return
+            checkpoint = (trial.checkpoint
+                          if trial.status == TrialStatus.PAUSED else None)
+            ok = self.executor.start_trial(trial, checkpoint=checkpoint)
+            if not ok:
+                if trial.status == TrialStatus.ERROR:
+                    self._resume_queue.pop(0)
+                    self._finalize_error(trial)
+                    continue
+                return  # no resources after all
+            self._resume_queue.pop(0)
+            if tracer.enabled:
+                tracer.begin(("trial", trial.trial_id), "trial",
+                             trial.trial_id, cat="lifecycle",
+                             trainable=trial.trainable_name, restored=True)
+
     def _launch_loop(self) -> None:
+        if self._resume_queue:
+            self._drain_resume_queue()
+            if self._resume_queue and self.executor.has_running():
+                # Out of capacity with restored trials still waiting: don't
+                # let the scheduler's choose loop hand their slots to fresh
+                # PENDING trials.  (If nothing is running we fall through —
+                # the head must be blocked on something else, and stalling
+                # the whole loop would deadlock.)
+                return
         tracer = self.obs.tracer
         while True:
             t_dec = tracer.clock.time() if tracer.enabled else 0.0
@@ -351,6 +432,18 @@ class TrialRunner:
             # Observability events (CHECKPOINTED / HEARTBEAT_MISSED /
             # RESTARTED / KILLED / RESIZED / ...): no scheduler decision,
             # just the loggers.
+            kinds = self._resume_event_fence.get(trial.trial_id)
+            if kinds:
+                # Re-executed pre-crash iteration (durable resume): already
+                # journaled by the original run — keep the merged journal
+                # duplicate-free.
+                kind = getattr(event.type, "value", str(event.type)).lower()
+                bound = kinds.get(kind)
+                if bound is not None:
+                    iteration = (event.info or {}).get("iteration")
+                    if iteration is not None and iteration <= bound:
+                        return not self.is_finished()
+                    kinds.pop(kind, None)
             self.logger.on_event(trial, event)
             return not self.is_finished()
 
@@ -362,6 +455,21 @@ class TrialRunner:
             # a join timeout, trial since requeued): acting on it would gate a
             # relaunched instance twice.  Drop it.
             return not self.is_finished()
+
+        fence = self._resume_result_fence.get(trial.trial_id)
+        if fence is not None:
+            if event.result.training_iteration <= fence:
+                # Durable resume replaying through an already-journaled
+                # stretch: the original run's records for these iterations
+                # survive in the (appended-to) journal, so drop the re-run's
+                # copy — but still re-open the credit gate, or the worker
+                # would park forever waiting for a verdict on it.
+                self.executor.resume_trial(trial)
+                return not self.is_finished()
+            # First live result past the fence: normal processing resumes
+            # (and a later PBT rewind below the old fence must not be
+            # dropped, so the fence is retired rather than kept around).
+            del self._resume_result_fence[trial.trial_id]
 
         result: Result = event.result
         profile = result.metrics.pop("_profile", None)
@@ -447,6 +555,12 @@ class TrialRunner:
                 timestamp=clock.time() if clock is not None else None,
                 info={"num_failures": trial.num_failures,
                       "max_failures": self.max_failures,
+                      # where the retry restarts from (0 = from scratch) —
+                      # durable resume reconstructs the iteration frontier
+                      # and failure counters from this (DESIGN.md §12)
+                      "checkpoint_iteration": (
+                          trial.checkpoint.training_iteration
+                          if trial.checkpoint is not None else 0),
                       # keep the cause on record even when the retry succeeds
                       "error": error[-2000:]}))
             return True

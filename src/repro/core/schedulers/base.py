@@ -109,6 +109,17 @@ class TrialScheduler:
         """
         return 1
 
+    def holds_trial(self, trial_id: str) -> bool:
+        """True when the scheduler is deliberately holding this PAUSED trial
+        (e.g. a HyperBand milestone-waiter awaiting its bracket cut) and the
+        runner must not relaunch it on its own.
+
+        Durable resume uses this to keep restored milestone-waiters parked
+        until the scheduler's own promote path fires (DESIGN.md §12).  Base:
+        nothing is ever held.
+        """
+        return False
+
     # -- lifecycle events -------------------------------------------------------
     def on_trial_add(self, runner: "TrialRunner", trial: Trial) -> None:
         pass

@@ -121,6 +121,14 @@ class HyperBandScheduler(TrialScheduler):
         bracket.add(trial)
         self._trial_bracket[trial.trial_id] = bracket
 
+    def holds_trial(self, trial_id: str) -> bool:
+        # A milestone-waiter (recorded in its bracket's ``arrived``) must stay
+        # PAUSED until the synchronous cut fires — relaunching it early (e.g.
+        # from the durable-resume queue) would let it run past the milestone
+        # before the bracket decides who survives.
+        bracket = self._trial_bracket.get(trial_id)
+        return bracket is not None and trial_id in bracket.arrived
+
     # -- result handling ----------------------------------------------------------
     def _cut_records(self, bracket: _SyncBracket, keep: Dict[str, bool],
                      arrived: Dict[str, float], milestone: int,

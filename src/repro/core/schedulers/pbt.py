@@ -112,6 +112,15 @@ class PopulationBasedTraining(TrialScheduler):
 
         donor = top[int(self._rng.integers(len(top)))]
         if donor.trial_id == trial.trial_id or donor.checkpoint is None:
+            # Journaled so resume replay can reproduce this branch: whether
+            # the drawn donor had a live checkpoint is executor state the
+            # journal otherwise would not capture (DESIGN.md §12).
+            self._record_decision(
+                trial.trial_id, "EXPLOIT_SKIPPED",
+                iteration=result.training_iteration, reason="exploit_skipped",
+                donor=donor.trial_id,
+                donor_is_self=donor.trial_id == trial.trial_id,
+                donor_has_checkpoint=donor.checkpoint is not None)
             return SchedulerDecision.CONTINUE
 
         # Stage the exploit: the runner restores donor's checkpoint with the
@@ -130,7 +139,9 @@ class PopulationBasedTraining(TrialScheduler):
         self._record_decision(
             trial.trial_id, SchedulerDecision.RESTART_WITH_CONFIG,
             iteration=result.training_iteration, reason="exploit",
-            donor=donor.trial_id, donor_score=donor_score, my_score=my_score,
+            donor=donor.trial_id,
+            donor_iteration=donor.checkpoint.training_iteration,
+            donor_score=donor_score, my_score=my_score,
             quantile_fraction=self.quantile_fraction, n_bottom=n_q,
             population=len(scored), new_config=new_config)
         return SchedulerDecision.RESTART_WITH_CONFIG

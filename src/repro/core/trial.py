@@ -115,6 +115,13 @@ class Trial:
         self.start_time: Optional[float] = None
         # bookkeeping for schedulers (e.g. PBT perturbation history)
         self.scheduler_state: Dict[str, Any] = {}
+        # Durable resume (DESIGN.md §12): virtual-clock phase target.  A
+        # restored trial's worker sleeps the clock to this point before its
+        # first step, so post-resume results land at the same virtual
+        # timestamps — and hence in the same cross-trial order — as in the
+        # uninterrupted run.  Consumed (reset to None) by the executor on the
+        # trial's first post-resume step.
+        self.resume_phase_t: Optional[float] = None
 
     # -- status ----------------------------------------------------------------
     @property

@@ -59,6 +59,27 @@ the self-contained HTML run report (metric curves, lifecycle gantt, fault
 timeline, best-config table) to ``<log-dir>/report.html`` when the run ends —
 even when it aborts.  Re-render any past run's artifacts offline with
 ``python -m repro.launch.report <log-dir>``.
+
+Durable resume (DESIGN.md §12) quickstart — kill a sweep, continue it::
+
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
+        --scheduler asha --num-samples 16 --executor concurrent \
+        --log-dir runs/sweep
+    # ... ^C / OOM-kill / kill -9 the controller mid-sweep, then:
+    PYTHONPATH=src python -m repro.launch.tune --arch smollm-135m --reduced \
+        --scheduler asha --num-samples 16 --executor concurrent \
+        --log-dir runs/sweep --resume
+
+``--resume`` rebuilds the experiment from the run's durable artifacts:
+trial statuses, iteration counts and metric histories replay from
+``<log-dir>/events.jsonl`` (torn tail from the kill repaired), scheduler and
+searcher state load from the watermarked ``<log-dir>/search_state.json``
+snapshot, and weights restore from the per-trial checkpoint mirrors under
+``<log-dir>/ckpt``.  Finished trials keep their results; interrupted trials
+continue from their last valid checkpoint; trials with none restart from
+scratch.  Pass the SAME sweep arguments as the original run — the space is
+only used to regenerate trial identities, and a conflicting --num-samples
+is rejected.  The journal is appended, never truncated.
 """
 from __future__ import annotations
 
@@ -214,11 +235,19 @@ def main() -> None:
                          "decisions, scheduler/searcher state, trial table) "
                          "to DIR on SIGTERM/abort; defaults to "
                          "<log-dir>/flightrec when --log-dir is set")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue an interrupted (even kill -9'd) sweep from "
+                         "<log-dir>'s durable artifacts: journal replay + "
+                         "search-state snapshot + checkpoint mirrors "
+                         "(DESIGN.md §12); pass the same sweep arguments as "
+                         "the original run")
     ap.add_argument("--log-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.report and not args.log_dir:
         ap.error("--report requires --log-dir (the JSONL journal feeds it)")
+    if args.resume and not args.log_dir:
+        ap.error("--resume requires --log-dir (the run's artifacts live there)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -281,6 +310,7 @@ def main() -> None:
         decisions={"on": True, "full": "full", "off": False}[args.decisions],
         flight_recorder=args.flightrec,
         live_table=args.live_table,
+        resume=args.resume,
         verbose=True,
         seed=args.seed,
     )

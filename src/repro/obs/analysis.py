@@ -28,7 +28,44 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 __all__ = ["TrialRecord", "ExperimentAnalysis", "DECISION_EVENTS",
-           "format_decision"]
+           "format_decision", "parse_journal_lines"]
+
+
+def parse_journal_lines(lines: Iterable[str]
+                        ) -> Tuple[Optional[Dict[str, Any]],
+                                   List[Dict[str, Any]], int]:
+    """Tolerant ordered parse of a JSONL journal: ``(header, records, skipped)``.
+
+    The one journal-reading code path (parsing contract in the module
+    docstring), shared by ``ExperimentAnalysis.from_lines`` and durable
+    resume (``repro.core.resume``), which needs the records *in stream
+    order* rather than folded per trial.  ``header`` is the first
+    ``run_header`` (None on a v1 stream); later headers — a resumed run
+    appends one per resume (DESIGN.md §12) — are dropped without counting
+    as skipped.  ``records`` holds every other parseable dict in order;
+    ``skipped`` counts unparseable/non-dict lines (the torn tail of a
+    crashed producer)."""
+    header: Optional[Dict[str, Any]] = None
+    records: List[Dict[str, Any]] = []
+    skipped = 0
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            obj = json.loads(line)
+        except (ValueError, TypeError):
+            skipped += 1  # truncated tail of a crashed run, or junk
+            continue
+        if not isinstance(obj, dict):
+            skipped += 1
+            continue
+        if obj.get("event") == "run_header":
+            if header is None:
+                header = obj
+            continue
+        records.append(obj)
+    return header, records, skipped
 
 # The scheduler/fault decision kinds reconstructed into per-trial timelines
 # (lowercased on the wire by JSONLLogger.on_event).  "decision" is the typed
@@ -166,8 +203,7 @@ class ExperimentAnalysis:
     @classmethod
     def from_lines(cls, lines: Iterable[str]) -> "ExperimentAnalysis":
         records: Dict[str, TrialRecord] = {}
-        header: Optional[Dict[str, Any]] = None
-        skipped = 0
+        header, stream, skipped = parse_journal_lines(lines)
 
         def rec(trial_id: str) -> TrialRecord:
             r = records.get(trial_id)
@@ -175,23 +211,8 @@ class ExperimentAnalysis:
                 r = records[trial_id] = TrialRecord(trial_id)
             return r
 
-        for line in lines:
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                obj = json.loads(line)
-            except (ValueError, TypeError):
-                skipped += 1  # truncated tail of a crashed run, or junk
-                continue
-            if not isinstance(obj, dict):
-                skipped += 1
-                continue
+        for obj in stream:
             kind = obj.get("event")
-            if kind == "run_header":
-                if header is None:
-                    header = obj
-                continue
             trial_id = obj.get("trial_id")
             if not isinstance(trial_id, str):
                 continue  # unknown record shape: tolerated, not indexed

@@ -25,9 +25,28 @@ import threading
 from collections import deque
 from typing import Any, Dict, List, Optional
 
-__all__ = ["FlightRecorder", "SearchStateSnapshotter", "json_safe"]
+__all__ = ["FlightRecorder", "SearchStateSnapshotter", "json_safe",
+           "load_search_state"]
 
 FLIGHTREC_SCHEMA_VERSION = 1
+SEARCH_STATE_SCHEMA_VERSION = 2
+
+
+def _strict_default(obj: Any) -> Any:
+    """``json.dumps`` default for search-state snapshots: numpy scalars
+    collapse to their Python value, everything else is an error.
+
+    Unlike forensic dumps (``json_safe`` + ``default=repr``), resume state
+    must round-trip exactly — a repr'd tuple or RNG word is silent data
+    corruption that only surfaces as wrong verdicts after resume, so any
+    state_dict() that is not JSON-clean fails loudly at write time.
+    """
+    fn = getattr(obj, "item", None)
+    if callable(fn):
+        return fn()  # numpy scalar (arrays of size>1 raise, which we want)
+    raise TypeError(
+        f"search-state snapshot is not JSON-clean: {type(obj).__name__}: "
+        f"{obj!r}")
 
 
 def json_safe(obj: Any, depth: int = 0) -> Any:
@@ -244,13 +263,17 @@ class SearchStateSnapshotter:
     """
 
     def __init__(self, path: str, clock: Optional[Any] = None,
-                 interval_s: float = 10.0):
+                 interval_s: float = 10.0,
+                 watermark_fn: Optional[Any] = None):
         if clock is None:
             from ..core.clock import get_default_clock  # lazy: no import cycle
             clock = get_default_clock()
         self.path = path
         self.clock = clock
         self.interval_s = float(interval_s)
+        # Called at snapshot time; returns the number of journal records the
+        # captured state has already been fed (the resume replay watermark).
+        self.watermark_fn = watermark_fn
         self._lock = threading.Lock()
         self._next: Optional[float] = None
         self.n_snapshots = 0
@@ -268,14 +291,19 @@ class SearchStateSnapshotter:
         return True
 
     def snapshot(self, scheduler: Any, searcher: Any = None) -> None:
+        watermark = None
+        if self.watermark_fn is not None:
+            watermark = int(self.watermark_fn())
         state: Dict[str, Any] = {
+            "schema_version": SEARCH_STATE_SCHEMA_VERSION,
             "t": self.clock.time(),
+            "journal_records": watermark,
             "scheduler": ({"type": type(scheduler).__name__,
-                           "state": json_safe(scheduler.state_dict())}
+                           "state": scheduler.state_dict()}
                           if scheduler is not None
                           and hasattr(scheduler, "state_dict") else None),
             "searcher": ({"type": type(searcher).__name__,
-                          "state": json_safe(searcher.state_dict())}
+                          "state": searcher.state_dict()}
                          if searcher is not None
                          and hasattr(searcher, "state_dict") else None),
         }
@@ -283,7 +311,22 @@ class SearchStateSnapshotter:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(state, f, sort_keys=True, separators=(",", ":"),
-                      default=repr)
+                      default=_strict_default)
             f.write("\n")
         os.replace(tmp, self.path)
         self.n_snapshots += 1
+
+
+def load_search_state(path: str) -> Optional[Dict[str, Any]]:
+    """Read a ``search_state.json`` snapshot; None when missing or corrupt.
+
+    Writes are atomic (tmp + replace) so corruption should never happen, but
+    resume must degrade to journal-only replay rather than crash on a bad
+    file.
+    """
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return state if isinstance(state, dict) else None

@@ -118,6 +118,11 @@ def run_scenario(
     token: Optional[str] = None,
     journal_path: Optional[str] = None,
     decisions: Any = True,
+    log_dir: Optional[str] = None,
+    resume: bool = False,
+    interrupt_after_steps: Optional[int] = None,
+    search_state_interval: float = 10.0,
+    keep_last: int = 2,
 ) -> ScenarioResult:
     """Run one scenario on a fresh ``VirtualClock`` to completion.
 
@@ -137,6 +142,17 @@ def run_scenario(
     ``run_id`` is pinned to ``token`` to keep same-token runs byte-identical
     — the flight recorder is pinned to the same id, so forensic bundles from
     identical-token runs are byte-identical too (ISSUE 8 comparability fix).
+
+    ``log_dir`` arms the full durable-resume stack (DESIGN.md §12): the
+    journal at ``log_dir/events.jsonl``, durable checkpoint mirrors under
+    ``log_dir/ckpt`` (rotated to ``keep_last``), and watermarked
+    search-state snapshots at ``log_dir/search_state.json`` every
+    ``search_state_interval`` virtual seconds.  ``interrupt_after_steps=N``
+    simulates a controller kill -9: the runner is abandoned after N events —
+    no final snapshot, no ``on_experiment_end`` — and a *partial*
+    ScenarioResult comes back.  ``resume=True`` (same ``token`` required, so
+    trial identities line up) rebuilds the runner from those artifacts via
+    ``prepare_resume`` and continues the sweep in a fresh stack.
     """
     import os as _os
     import tempfile as _tempfile
@@ -144,6 +160,15 @@ def run_scenario(
 
     token = token if token is not None else f"{scenario.name}-{next(_token_counter)}"
     reset_faults()
+    if log_dir is not None:
+        _os.makedirs(log_dir, exist_ok=True)
+        if journal_path is None:
+            journal_path = _os.path.join(log_dir, "events.jsonl")
+    if resume and (log_dir is None or journal_path is None
+                   or not _os.path.exists(journal_path)):
+        raise ValueError("resume=True needs a log_dir holding the journal of "
+                         "the interrupted run (pass the same token too, so "
+                         "trial identities line up)")
     # The process tier runs REAL worker processes: the clock cannot see them,
     # so fast-forwarding virtual time between their (real) deliveries would
     # trip the runner's stall detector long before any child speaks.  That
@@ -156,20 +181,18 @@ def run_scenario(
         obs.bind_clock(clock)  # span timestamps must ride the virtual axis
     pool = SlicePool(n_virtual=pool_devices)
     recorder = RecordingLogger()
-    logger: Logger = recorder
+    # The journal is opened AFTER the resume plan is prepared (below): a
+    # resumed run re-opens it in append mode with the surviving record count.
     journal = None
-    if journal_path is not None:
-        journal = JSONLLogger(journal_path, clock=clock,
-                              run_id=f"run-{token}", executor=executor,
-                              decisions=decisions is not False)
-        logger = CompositeLogger([recorder, journal])
     flightrec = FlightRecorder(
         clock=clock, run_id=f"run-{token}",
         out_dir=_os.environ.get("REPRO_FLIGHTREC_DIR", "flightrec"))
     t0 = _wall.monotonic()
     with use_clock(clock):
         store = ObjectStore()
-        ckpt = CheckpointManager(store)
+        ckpt = (CheckpointManager(store, dir=_os.path.join(log_dir, "ckpt"),
+                                  durable=True, keep_last=keep_last)
+                if log_dir is not None else CheckpointManager(store))
         common = dict(
             trainable_cls_resolver=lambda name: SimTrainable,
             checkpoint_manager=ckpt,
@@ -238,8 +261,66 @@ def run_scenario(
         if scenario.elastic is not None or lookahead != 1:
             broker = ResourceBroker(policy=resolve_policy(scenario.elastic),
                                     lookahead=lookahead, clock=clock)
+
+        def _build_trials() -> List[Trial]:
+            out = []
+            for i, config in enumerate(scenario.configs):
+                cfg = dict(config)
+                cfg.setdefault("sim_id", f"{scenario.name}-{i:05d}")
+                cfg["sim_token"] = token
+                if fault_dir is not None:
+                    # Process tier: wall-time fault vocabulary.  Virtual
+                    # durations make no sense for real children (they'd sleep
+                    # real hours), so scripted timing is dropped and
+                    # stragglers sleep a short real interval the virtual
+                    # deadline math escalates around.
+                    cfg.pop("step_s", None)
+                    cfg.pop("jitter_s", None)
+                    cfg.pop("durations", None)
+                    cfg["fault_dir"] = fault_dir
+                    if cfg.pop("straggle_s", None) is not None:
+                        cfg.setdefault("straggle_wall_s", 3.0)
+                out.append(Trial(
+                    cfg, trainable_name=trainable_name,
+                    resources=Resources(cpu=1.0,
+                                        devices=int(cfg.get("devices_req", 1))),
+                    stopping_criteria={
+                        "training_iteration": scenario.stop_iteration},
+                    trial_id=f"{token}-{i:05d}",
+                ))
+            return out
+
+        scheduler = scheduler_factory()
+        plan = None
+        if resume:
+            from ..core.resume import prepare_resume
+            plan = prepare_resume(
+                journal_path,
+                _os.path.join(log_dir, "search_state.json"),
+                scheduler, base_trials=_build_trials(),
+                checkpoint_dir=_os.path.join(log_dir, "ckpt"),
+                trainable_name=trainable_name,
+                stopping_criteria={
+                    "training_iteration": scenario.stop_iteration})
+        logger: Logger = recorder
+        if journal_path is not None:
+            journal = JSONLLogger(
+                journal_path, clock=clock, run_id=f"run-{token}",
+                executor=executor, decisions=decisions is not False,
+                resumed=plan is not None,
+                initial_records=plan.n_journal_records if plan is not None else 0)
+            logger = CompositeLogger([recorder, journal])
+        snapshotter = None
+        if log_dir is not None:
+            from ..obs.flightrec import SearchStateSnapshotter
+            snapshotter = SearchStateSnapshotter(
+                _os.path.join(log_dir, "search_state.json"), clock=clock,
+                interval_s=search_state_interval,
+                watermark_fn=((lambda: journal.n_records)
+                              if journal is not None else None))
+
         runner = TrialRunner(
-            scheduler_factory(),
+            scheduler,
             ex,
             logger=logger,
             trainable_name=trainable_name,
@@ -249,33 +330,27 @@ def run_scenario(
             obs=obs,
             decisions=decisions,
             flight_recorder=flightrec,
+            state_snapshotter=snapshotter,
         )
-        for i, config in enumerate(scenario.configs):
-            cfg = dict(config)
-            cfg.setdefault("sim_id", f"{scenario.name}-{i:05d}")
-            cfg["sim_token"] = token
-            if fault_dir is not None:
-                # Process tier: wall-time fault vocabulary.  Virtual durations
-                # make no sense for real children (they'd sleep real hours),
-                # so scripted timing is dropped and stragglers sleep a short
-                # real interval the virtual deadline math escalates around.
-                cfg.pop("step_s", None)
-                cfg.pop("jitter_s", None)
-                cfg.pop("durations", None)
-                cfg["fault_dir"] = fault_dir
-                if cfg.pop("straggle_s", None) is not None:
-                    cfg.setdefault("straggle_wall_s", 3.0)
-            runner.add_trial(Trial(
-                cfg, trainable_name=trainable_name,
-                resources=Resources(cpu=1.0,
-                                    devices=int(cfg.get("devices_req", 1))),
-                stopping_criteria={"training_iteration": scenario.stop_iteration},
-                trial_id=f"{token}-{i:05d}",
-            ))
+        if plan is not None:
+            runner.apply_resume_plan(plan)
+        else:
+            for trial in _build_trials():
+                runner.add_trial(trial)
         if fleet is not None:
             fleet.start()
         try:
-            trials = runner.run(max_steps=max_steps)
+            if interrupt_after_steps is not None:
+                # Simulated controller kill -9: abandon the runner mid-sweep.
+                # No final search-state snapshot, no on_experiment_end — only
+                # what the original process had already flushed survives.
+                for _ in range(interrupt_after_steps):
+                    if not runner.step():
+                        break
+                ex.shutdown()  # reap worker threads; journals nothing
+                trials = runner.trials
+            else:
+                trials = runner.run(max_steps=max_steps)
         except BaseException:
             # A controller exception IS the crash-forensics use case: leave a
             # bundle behind (CI uploads the dump dir with if: failure()).

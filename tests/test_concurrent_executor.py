@@ -305,8 +305,11 @@ class TestHeartbeat:
         """The wall-clock version of this test could only assert "some
         heartbeat arrived within 10 real seconds".  On virtual time the whole
         schedule is deterministic: a 0.63s step against a 0.15s timeout with
-        a 0.05s monitor tick warns at t=0.15/0.35/0.55, all before the
-        RESULT — exactly three warnings, strictly ordered."""
+        a 0.05s monitor tick warns every 0.15s — t=0.15/0.30/0.45/0.60, all
+        before the RESULT — exactly four warnings, strictly ordered.  (The
+        clock's timestamp-axis quantization lands the monitor ticks on
+        exactly representable times, so the every-timeout re-warn throttle
+        fires on the dot instead of skipping knife-edge ties.)"""
         vc = VirtualClock()
         with use_clock(vc):
             ex = make_concurrent(self.Slow, checkpoint_freq=0,
@@ -320,10 +323,10 @@ class TestHeartbeat:
                 events.append(ev)
             ex.shutdown()
         kinds = [e.type for e in events]
-        assert kinds == [EventType.HEARTBEAT_MISSED] * 3 + [EventType.RESULT]
+        assert kinds == [EventType.HEARTBEAT_MISSED] * 4 + [EventType.RESULT]
         stalled = [e.info["stalled_s"] for e in events[:-1]]
-        assert stalled == [pytest.approx(0.15), pytest.approx(0.35),
-                           pytest.approx(0.55)]
+        assert stalled == [pytest.approx(0.15), pytest.approx(0.30),
+                           pytest.approx(0.45), pytest.approx(0.60)]
         assert vc.monotonic() == pytest.approx(0.63)  # step length, no slack
 
 

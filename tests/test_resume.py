@@ -9,11 +9,14 @@ from repro.core.experiment import load_experiment_state
 
 
 class Slow(Trainable):
+    steps_executed = 0  # class-wide step counter (reset per assertion site)
+
     def setup(self, config):
         self.x = 1.0
         self.lr = config["lr"]
 
     def step(self):
+        Slow.steps_executed += 1
         self.x *= 0.9
         return {"loss": self.x + self.lr}
 
@@ -56,13 +59,27 @@ def test_resume_restores_from_disk_checkpoint(tmp_path):
                     checkpoint_freq=2, log_dir=log_dir, max_steps=7)
     trials = load_experiment_state(log_dir)
     paused = [t for t in trials if t.status == TrialStatus.PAUSED]
-    if paused:  # a durable checkpoint existed mid-flight
-        t = paused[0]
-        assert t.checkpoint.path and os.path.exists(t.checkpoint.path)
+    assert paused, "interruption must leave mid-flight trials PAUSED"
+    for t in paused:
+        assert t.checkpoint is not None, f"{t.trial_id} paused w/o checkpoint"
+        assert t.checkpoint.path and os.path.exists(t.checkpoint.path), \
+            f"{t.trial_id} checkpoint mirror missing from disk"
+    # sum of journal-backed restore points: each trial resumes from its
+    # newest mirror at-or-below the journal frontier, re-running only the
+    # iterations above it
+    expected_steps = sum(8 - t.checkpoint.training_iteration for t in paused)
+
+    Slow.steps_executed = 0
     an = run_experiments(Slow, None, resume=True,
                          scheduler=FIFOScheduler(metric="loss", mode="min"),
                          stop={"training_iteration": 8}, total_devices=2,
                          checkpoint_freq=2, log_dir=log_dir)
+    assert all(t.status == TrialStatus.TERMINATED for t in an.trials)
+    # continuation, not re-execution: the resumed run does exactly the steps
+    # above each trial's restored checkpoint — never the full 16 from scratch
+    assert Slow.steps_executed == expected_steps, (
+        f"resume ran {Slow.steps_executed} steps, wanted {expected_steps} "
+        "(from-checkpoint continuation)")
     # loss continuity: final loss equals an uninterrupted 8-step run's
     for t in an.trials:
         np.testing.assert_allclose(t.last_result.value("loss"), 0.9 ** 8,

@@ -1,0 +1,160 @@
+"""Durable-resume equivalence (ISSUE 10 tentpole, DESIGN.md §12).
+
+A sweep interrupted mid-flight and resumed from its on-disk artifacts —
+journal, ``search_state.json`` snapshot, checkpoint mirrors — must finish
+**bit-identical** to the same sweep run uninterrupted: same trial table, same
+per-trial decision stream (source, verdict, iteration, inputs, and the
+virtual-clock timestamp ``t``), same ``summary_json``.  For ASHA, HyperBand
+AND PBT, across several interruption points, including a double interrupt
+(kill the resumed run and resume again).
+
+The interruption here is a cooperative ``runner.step()`` cutoff inside one
+process (tests/test_resume_kill9.py covers the true-SIGKILL tier); what makes
+it representative is that the cutoff lands between arbitrary journal records,
+so the resume path exercises torn tails, unsnapshotted journal suffixes and
+checkpoint mirrors ahead of the journal frontier.
+
+On mismatch, the clean and resumed log dirs are copied to
+``$REPRO_RESUME_ARTIFACT_DIR`` (when set) so CI can upload them.
+"""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core.schedulers.asha import AsyncHyperBandScheduler
+from repro.core.schedulers.hyperband import HyperBandScheduler
+from repro.core.schedulers.pbt import PopulationBasedTraining
+from repro.obs.analysis import ExperimentAnalysis
+from repro.testing.scenarios import Scenario, run_scenario
+
+STEP_S = [0.5, 0.7, 0.9, 1.1, 1.3, 1.7, 1.9, 2.3]
+
+SCHEDULERS = {
+    "asha": lambda: AsyncHyperBandScheduler(
+        metric="loss", mode="min", max_t=9, grace_period=1,
+        reduction_factor=3),
+    "hyperband": lambda: HyperBandScheduler(
+        metric="loss", mode="min", max_t=9, eta=3),
+    "pbt": lambda: PopulationBasedTraining(
+        metric="loss", mode="min", perturbation_interval=3,
+        hyperparam_mutations={"lr": [0.001, 0.004, 0.008, 0.02]}, seed=7),
+}
+
+# Cooperative-interrupt points (runner steps).  Early (most trials PENDING),
+# mid-sweep (rungs/brackets part-filled; PBT mid-exploit window), and late
+# (some trials TERMINATED, exploits of finished donors still ahead).
+KILL_POINTS = {"asha": (9, 23, 41), "hyperband": (13, 29), "pbt": (19, 47, 71)}
+
+
+def scenario(name):
+    configs = [{"lr": 0.001 * (i + 1), "step_s": STEP_S[i],
+                "jitter_s": 0.25} for i in range(8)]
+    return Scenario(name=name, configs=configs, stop_iteration=9,
+                    max_failures=0)
+
+
+def sweep(kind, log_dir, **kw):
+    return run_scenario(scenario(f"eqv-{kind}"), SCHEDULERS[kind],
+                        executor="concurrent", pool_devices=8,
+                        token=f"eqv-{kind}", log_dir=log_dir,
+                        search_state_interval=3.0, keep_last=50, **kw)
+
+
+def table(res):
+    return sorted((t.trial_id, t.status.value, t.training_iteration,
+                   round(t.best_value("loss", "min") or -1.0, 9))
+                  for t in res.trials)
+
+
+def decisions(log_dir):
+    """Per-trial decision streams: (source, verdict, iteration, inputs, t)."""
+    out = {}
+    with open(os.path.join(log_dir, "events.jsonl")) as f:
+        for line in f:
+            try:
+                obj = json.loads(line)
+            except ValueError:
+                continue
+            if obj.get("event") == "decision":
+                info = dict(obj.get("info") or {})
+                out.setdefault(obj.get("trial_id"), []).append(
+                    (info.get("source"), info.get("verdict"),
+                     info.get("iteration"),
+                     json.dumps(info.get("inputs"), sort_keys=True),
+                     obj.get("t")))
+    return out
+
+
+def summary(log_dir):
+    return ExperimentAnalysis.from_journal(
+        os.path.join(log_dir, "events.jsonl")).summary_json(
+            metric="loss", mode="min")
+
+
+def save_artifacts(*dirs):
+    dest = os.environ.get("REPRO_RESUME_ARTIFACT_DIR")
+    if not dest:
+        return
+    os.makedirs(dest, exist_ok=True)
+    for d in dirs:
+        shutil.copytree(d, os.path.join(dest, os.path.basename(d)),
+                        dirs_exist_ok=True)
+
+
+def assert_equivalent(clean_res, clean_dir, resumed_res, resumed_dir, label):
+    problems = []
+    if table(clean_res) != table(resumed_res):
+        problems.append(f"trial table differs:\n  clean : {table(clean_res)}"
+                        f"\n  resume: {table(resumed_res)}")
+    dc, dr = decisions(clean_dir), decisions(resumed_dir)
+    for tid in sorted(set(dc) | set(dr)):
+        if dc.get(tid) != dr.get(tid):
+            problems.append(f"decision stream differs for {tid}:"
+                            f"\n  clean : {dc.get(tid)}"
+                            f"\n  resume: {dr.get(tid)}")
+    if summary(clean_dir) != summary(resumed_dir):
+        problems.append("summary_json differs")
+    if problems:
+        save_artifacts(clean_dir, resumed_dir)
+        pytest.fail(f"[{label}] resumed run is not bit-identical:\n"
+                    + "\n".join(problems))
+
+
+@pytest.fixture(scope="module")
+def clean_runs(tmp_path_factory):
+    """One uninterrupted reference sweep per scheduler."""
+    out = {}
+    for kind in SCHEDULERS:
+        d = str(tmp_path_factory.mktemp(f"clean_{kind}"))
+        out[kind] = (sweep(kind, d), d)
+    return out
+
+
+@pytest.mark.parametrize("kind", list(SCHEDULERS))
+def test_resume_bit_identical(kind, clean_runs, tmp_path):
+    clean_res, clean_dir = clean_runs[kind]
+    for kill in KILL_POINTS[kind]:
+        d = str(tmp_path / f"kill{kill}")
+        sweep(kind, d, interrupt_after_steps=kill)
+        resumed = sweep(kind, d, resume=True)
+        assert_equivalent(clean_res, clean_dir, resumed, d,
+                          f"{kind} kill@{kill}")
+
+
+@pytest.mark.parametrize("kind", ["asha", "pbt"])
+def test_double_interrupt(kind, clean_runs, tmp_path):
+    """Kill the sweep, resume, kill the resumed run, resume again."""
+    clean_res, clean_dir = clean_runs[kind]
+    d = str(tmp_path / "twice")
+    sweep(kind, d, interrupt_after_steps=23)
+    sweep(kind, d, resume=True, interrupt_after_steps=8)
+    resumed = sweep(kind, d, resume=True)
+    assert_equivalent(clean_res, clean_dir, resumed, d,
+                      f"{kind} double-interrupt")
+
+
+def test_resume_without_journal_raises(tmp_path):
+    with pytest.raises(ValueError):
+        sweep("asha", str(tmp_path / "empty"), resume=True)

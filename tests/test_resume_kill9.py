@@ -1,0 +1,108 @@
+"""True-SIGKILL durable resume (ISSUE 10 acceptance, DESIGN.md §12).
+
+The in-process equivalence tier interrupts cooperatively; this tier does what
+the tentpole actually promises to survive: a controller killed with
+``SIGKILL`` — no atexit, no flushed buffers, a possibly torn journal tail.
+Each case runs ``python -m repro.testing.kill9`` three times:
+
+  1. clean child → runs the sweep uninterrupted, writes ``final.json``
+  2. killed child → same sweep, ``os.kill(getpid(), SIGKILL)`` mid-flight
+  3. resumed child → ``--resume`` from the survivor artifacts, writes
+     ``final.json``
+
+and requires the two ``final.json`` files byte-identical and the decision
+streams (including virtual timestamps) equal, for ASHA, HyperBand and PBT.
+
+On mismatch the child log dirs are copied to ``$REPRO_RESUME_ARTIFACT_DIR``
+(when set) for CI upload.
+"""
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def run_child(log_dir, scheduler, *extra, expect_kill=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.kill9", "--log-dir", log_dir,
+         "--scheduler", scheduler, *extra],
+        env=env, capture_output=True, text=True, timeout=300)
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, (
+            f"child should have SIGKILLed itself, got rc={proc.returncode}\n"
+            f"stderr: {proc.stderr[-2000:]}")
+    else:
+        assert proc.returncode == 0, (
+            f"child failed rc={proc.returncode}\n"
+            f"stderr: {proc.stderr[-2000:]}")
+    return proc
+
+
+def decisions(log_dir):
+    out = {}
+    with open(os.path.join(log_dir, "events.jsonl")) as f:
+        for line in f:
+            try:
+                obj = json.loads(line)
+            except ValueError:
+                continue
+            if obj.get("event") == "decision":
+                info = dict(obj.get("info") or {})
+                out.setdefault(obj.get("trial_id"), []).append(
+                    (info.get("source"), info.get("verdict"),
+                     info.get("iteration"),
+                     json.dumps(info.get("inputs"), sort_keys=True),
+                     obj.get("t")))
+    return out
+
+
+def save_artifacts(*dirs):
+    dest = os.environ.get("REPRO_RESUME_ARTIFACT_DIR")
+    if not dest:
+        return
+    os.makedirs(dest, exist_ok=True)
+    for d in dirs:
+        shutil.copytree(d, os.path.join(dest, "kill9-" + os.path.basename(d)),
+                        dirs_exist_ok=True)
+
+
+@pytest.mark.parametrize("scheduler,kill_after",
+                         [("asha", 12), ("hyperband", 9), ("pbt", 17)])
+def test_kill9_resume_bit_identical(tmp_path, scheduler, kill_after):
+    clean = str(tmp_path / f"{scheduler}_clean")
+    killed = str(tmp_path / f"{scheduler}_killed")
+
+    run_child(clean, scheduler)
+    run_child(killed, scheduler, "--kill-after", str(kill_after),
+              expect_kill=True)
+    # The SIGKILLed controller must have left durable artifacts behind.
+    assert os.path.exists(os.path.join(killed, "events.jsonl"))
+    assert not os.path.exists(os.path.join(killed, "final.json"))
+    run_child(killed, scheduler, "--resume")
+
+    with open(os.path.join(clean, "final.json"), "rb") as f:
+        final_clean = f.read()
+    with open(os.path.join(killed, "final.json"), "rb") as f:
+        final_resumed = f.read()
+    dc, dr = decisions(clean), decisions(killed)
+    problems = []
+    if final_clean != final_resumed:
+        problems.append("final.json differs (trial table / summary)")
+    for tid in sorted(set(dc) | set(dr)):
+        if dc.get(tid) != dr.get(tid):
+            problems.append(f"decision stream differs for {tid}:"
+                            f"\n  clean : {dc.get(tid)}"
+                            f"\n  resume: {dr.get(tid)}")
+    if problems:
+        save_artifacts(clean, killed)
+        pytest.fail(f"[{scheduler} kill9@{kill_after}] resumed run is not "
+                    "bit-identical:\n" + "\n".join(problems))

@@ -1,0 +1,165 @@
+"""search_state.json disk round-trips (DESIGN.md §12, ISSUE 10 acceptance).
+
+Every scheduler and searcher in the matrix must survive the full durable
+path — ``SearchStateSnapshotter.snapshot`` → bytes on disk →
+``load_search_state`` → ``load_state_dict`` into a *fresh* instance — and
+then continue identically: same next verdict, same next suggestion, same RNG
+stream.  The in-memory ``state_dict`` round-trips in test_provenance.py
+already pin the schema; this file pins the file format (atomic write, the
+watermark field, type tags) and the through-disk continuation contract that
+``prepare_resume`` relies on.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (ASHAScheduler, FIFOScheduler, GPSearcher,
+                        GridSearcher, HyperBandScheduler, MedianStoppingRule,
+                        PopulationBasedTraining, RandomSearcher, Result,
+                        SchedulerDecision, TPESearcher, Trial, uniform)
+from repro.obs.flightrec import SearchStateSnapshotter, load_search_state
+
+from test_provenance import run_qualities
+
+
+def snap_to_disk(tmp_path, scheduler=None, searcher=None, watermark=42):
+    """Snapshot through the real writer and read back through the real loader."""
+    path = str(tmp_path / "search_state.json")
+    snap = SearchStateSnapshotter(path, interval_s=0.0,
+                                  watermark_fn=lambda: watermark)
+    snap.snapshot(scheduler, searcher)
+    state = load_search_state(path)
+    assert state is not None, "snapshot did not land on disk"
+    assert state["journal_records"] == watermark
+    return state
+
+
+class TestSchedulerDiskRoundtrip:
+    def test_fifo(self, tmp_path):
+        state = snap_to_disk(tmp_path, scheduler=FIFOScheduler())
+        assert state["scheduler"]["type"] == "FIFOScheduler"
+        s2 = FIFOScheduler()
+        s2.load_state_dict(state["scheduler"]["state"])
+        assert s2.state_dict() == {}
+
+    def test_asha(self, tmp_path):
+        mk = lambda: ASHAScheduler(metric="loss", mode="min", max_t=10,
+                                   grace_period=1, reduction_factor=2)
+        s1 = mk()
+        trials = [Trial({}, trial_id=f"a{i}") for i in range(4)]
+        for t in trials:
+            s1.on_trial_add(None, t)
+        for i, t in enumerate(trials[:3]):
+            s1.on_result(None, t, Result(t.trial_id, 1, {"loss": 0.1 * i}))
+        state = snap_to_disk(tmp_path, scheduler=s1)
+        s2 = mk()
+        s2.load_state_dict(state["scheduler"]["state"])
+        r = Result("a3", 1, {"loss": 9.0})
+        assert s2.on_result(None, trials[3], r) \
+            == s1.on_result(None, trials[3], r) == SchedulerDecision.STOP
+
+    def test_median(self, tmp_path):
+        mk = lambda: MedianStoppingRule(metric="loss", mode="min",
+                                        grace_period=1,
+                                        min_samples_required=2)
+        s1 = mk()
+        run_qualities([0.0, 0.1, 2.0], s1, max_iter=8, devices=3)
+        state = snap_to_disk(tmp_path, scheduler=s1)
+        s2 = mk()
+        s2.load_state_dict(state["scheduler"]["state"])
+        # a laggard far above the running median: within grace on its first
+        # result, stopped on its second — identically in both instances
+        lag = Trial({}, trial_id="lag")
+        s1.on_trial_add(None, lag), s2.on_trial_add(None, lag)
+        for it, want in [(2, SchedulerDecision.CONTINUE),
+                         (3, SchedulerDecision.STOP)]:
+            r = Result("lag", it, {"loss": 99.0})
+            assert s2.on_result(None, lag, r) == s1.on_result(None, lag, r) \
+                == want
+
+    def test_hyperband(self, tmp_path):
+        mk = lambda: HyperBandScheduler(metric="loss", mode="min", max_t=9,
+                                        eta=3)
+        s1 = mk()
+        trials, _ = run_qualities(list(np.linspace(0.0, 2.0, 9)), s1,
+                                  max_iter=9, devices=3)
+        state = snap_to_disk(tmp_path, scheduler=s1)
+        s2 = mk()
+        s2.load_state_dict(state["scheduler"]["state"], trials=trials)
+        assert json.dumps(s2.state_dict(), sort_keys=True, default=str) \
+            == json.dumps(s1.state_dict(), sort_keys=True, default=str)
+        assert s2.n_stopped == s1.n_stopped
+
+    def test_pbt_rng_stream(self, tmp_path):
+        mk = lambda: PopulationBasedTraining(
+            metric="loss", mode="min", perturbation_interval=3,
+            hyperparam_mutations={"quality": uniform(0.0, 2.0)}, seed=0)
+        s1 = mk()
+        run_qualities([0.0, 1.0, 2.0], s1, max_iter=9, devices=3)
+        state = snap_to_disk(tmp_path, scheduler=s1)
+        s2 = mk()
+        s2.load_state_dict(state["scheduler"]["state"])
+        # the restored RNG continues the exact stream the original would have
+        assert s2._explore({"quality": 1.0}) == s1._explore({"quality": 1.0})
+
+
+class TestSearcherDiskRoundtrip:
+    def test_random(self, tmp_path):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = RandomSearcher(space, seed=5)
+        for i in range(3):
+            s1.suggest(f"r{i}")
+        state = snap_to_disk(tmp_path, searcher=s1)
+        assert state["searcher"]["type"] == "RandomSearcher"
+        s2 = RandomSearcher(space, seed=0)  # seed overwritten by load
+        s2.load_state_dict(state["searcher"]["state"])
+        assert s2.suggest("r3") == s1.suggest("r3")
+
+    def test_grid(self, tmp_path):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = GridSearcher(space, num_samples=5, seed=6)
+        for i in range(2):
+            s1.suggest(f"g{i}")
+        state = snap_to_disk(tmp_path, searcher=s1)
+        s2 = GridSearcher(space, num_samples=5, seed=6)
+        s2.load_state_dict(state["searcher"]["state"])
+        assert s2.suggest("g2") == s1.suggest("g2")
+
+    @pytest.mark.parametrize("cls,kw", [(GPSearcher, {"n_startup_trials": 2}),
+                                        (TPESearcher, {"n_startup_trials": 2})])
+    def test_model_searchers(self, tmp_path, cls, kw):
+        space = {"x": uniform(0.0, 1.0)}
+        s1 = cls(space, seed=7, **kw)
+        for i in range(3):
+            s1.observe(f"o{i}", {"x": 0.2 * (i + 1)}, 1.0 - 0.3 * i, True)
+        state = snap_to_disk(tmp_path, searcher=s1)
+        s2 = cls(space, seed=0, **kw)
+        s2.load_state_dict(state["searcher"]["state"])
+        assert s2.suggest("n0") == s1.suggest("n0")
+
+
+class TestFileContract:
+    def test_corrupt_file_degrades_to_none(self, tmp_path):
+        p = tmp_path / "search_state.json"
+        p.write_text("{ torn mid-wri")
+        assert load_search_state(str(p)) is None
+
+    def test_missing_file_is_none(self, tmp_path):
+        assert load_search_state(str(tmp_path / "nope.json")) is None
+
+    def test_watermark_absent_without_fn(self, tmp_path):
+        path = str(tmp_path / "s.json")
+        SearchStateSnapshotter(path, interval_s=0.0).snapshot(FIFOScheduler())
+        assert load_search_state(path)["journal_records"] is None
+
+    def test_snapshot_is_single_complete_json_doc(self, tmp_path):
+        path = str(tmp_path / "s.json")
+        snap = SearchStateSnapshotter(path, interval_s=0.0,
+                                      watermark_fn=lambda: 7)
+        sched = ASHAScheduler(metric="loss", mode="min", max_t=4)
+        for _ in range(3):  # repeated writes replace, never append
+            snap.snapshot(sched)
+        with open(path) as f:
+            doc = json.load(f)  # raises if torn/appended
+        assert doc["scheduler"]["type"] == type(sched).__name__
